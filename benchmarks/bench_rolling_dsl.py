@@ -1,0 +1,127 @@
+"""Benchmark: §3.1.6 optimized query execution — DSL vs black-box UDF.
+
+The paper's single explicit performance claim: features declared through the
+DSL (rolling-window aggregation being "a common case") can be optimized by
+the platform, while UDFs are opaque.  We quantify the three optimization
+levels on identical workloads:
+
+  udf-naive     per-agg python/numpy windowing (what a black-box UDF does:
+                re-sort, re-scan O(N·W) per aggregation)
+  dsl-xla       the DSL plan (shared sort + shared window indices, cumsum
+                prefix O(N) per aggregation) on the XLA fallback path
+  dsl-kernel    the same plan lowering to the Pallas TPU kernel — CPU runs
+                interpret mode, so we report its *analytic* op/byte counts
+                (the TPU-roofline estimate), not wall time
+
+Wall times are CPU wall times of the host path; the algorithmic win
+(plan sharing + prefix trick) is substrate-independent.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.dsl import DslTransform, RollingAgg
+from repro.core.table import Table
+from repro.data.sources import SyntheticEventSource
+
+HOUR = 3_600_000
+
+
+def _workload(n_rows: int, n_aggs: int, seed: int = 0):
+    src = SyntheticEventSource(
+        "tx", seed=seed, num_entities=max(16, n_rows // 200),
+        events_per_bucket=500,
+    )
+    table = src.read(0, (n_rows // 500 + 1) * HOUR)
+    table = table.take(np.arange(min(n_rows, len(table))))
+    windows = [2 * HOUR, 6 * HOUR]
+    aggs = [
+        RollingAgg(f"f{i}", ["amount", "quantity"][i % 2],
+                   windows[i % len(windows)], ["sum", "mean"][i % 2])
+        for i in range(n_aggs)
+    ]
+    return table, aggs
+
+
+def _udf_naive(table: Table, aggs) -> dict[str, np.ndarray]:
+    """Black-box UDF baseline: per-agg sort + per-row window scan."""
+    out = {}
+    for a in aggs:
+        order = np.lexsort((table["ts"], table["entity_id"]))
+        ent = table["entity_id"][order]
+        ts = table["ts"][order]
+        val = table[a.source_col][order].astype(np.float64)
+        n = len(ent)
+        res = np.zeros(n, np.float32)
+        start = 0
+        for i in range(n):
+            if i and ent[i] != ent[i - 1]:
+                start = i
+            while ts[start] <= ts[i] - a.window or ent[start] != ent[i]:
+                start += 1
+            w = val[start : i + 1]
+            res[i] = w.sum() if a.agg == "sum" else w.mean()
+        out[a.output] = res
+    return out
+
+
+def run(sizes=(2_000, 10_000, 50_000), n_aggs=6) -> dict:
+    rows = []
+    for n in sizes:
+        table, aggs = _workload(n, n_aggs)
+        ctx = {}
+
+        t0 = time.perf_counter()
+        naive = _udf_naive(table, aggs)
+        t_naive = time.perf_counter() - t0
+
+        dsl_xla = DslTransform("entity_id", "ts", aggs, use_kernel=False)
+        t0 = time.perf_counter()
+        out_xla = dsl_xla(table, ctx)
+        t_xla = time.perf_counter() - t0
+        # repeat with warm jit cache (steady-state number)
+        t0 = time.perf_counter()
+        out_xla = dsl_xla(table, ctx)
+        t_xla_warm = time.perf_counter() - t0
+
+        # correctness cross-check naive vs optimized (both emit rows in
+        # (entity, ts) sorted order).  The XLA fallback's global fp32 prefix
+        # drifts ~1e-7 * running-total (catastrophic cancellation: ~0.9 abs
+        # at 50k rows of ~100-valued events) — the Pallas kernel re-zeroes
+        # its prefix per block and does NOT drift (tests/kernels assert
+        # tight tolerances); allow the fallback drift here.
+        for a in aggs:
+            np.testing.assert_allclose(
+                out_xla[a.output], naive[a.output], rtol=1e-2, atol=1.0
+            )
+
+        # analytic TPU-kernel cost for the shared plan (per distinct window):
+        # prefix matmul (H+B)^2·F MACs per block + gather one-hot, vs the
+        # UDF's O(N·W·A) reads.
+        feat = 2  # distinct source columns
+        n_windows = len({a.window for a in aggs})
+        kernel_flops = n_windows * (len(table) / 256) * (512 * 512 * feat * 2 + 256 * 513 * feat * 2)
+        naive_reads = sum(
+            float(np.sum(np.minimum(np.arange(len(table)) + 1, 200)))  # ~avg span
+            for _ in aggs
+        )
+        rows.append({
+            "rows": len(table),
+            "aggs": n_aggs,
+            "udf_naive_s": round(t_naive, 4),
+            "dsl_xla_s": round(t_xla, 4),
+            "dsl_xla_warm_s": round(t_xla_warm, 4),
+            "speedup_cold": round(t_naive / max(t_xla, 1e-9), 1),
+            "speedup_warm": round(t_naive / max(t_xla_warm, 1e-9), 1),
+            "kernel_flops_analytic": kernel_flops,
+        })
+    return {"table": rows, "notes": "dsl-kernel wall time is interpret-mode on CPU; analytic flops reported instead"}
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=1))

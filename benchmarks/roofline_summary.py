@@ -1,0 +1,92 @@
+"""Roofline summary: renders results/dryrun.json into the §Roofline table.
+
+Per (arch x shape x mesh): the three terms in seconds, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS useful ratio, and peak HBM per device.
+This module is pure reporting — the numbers come from the dry-run's
+compiled artifacts (see repro/launch/dryrun.py).
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+V5E_HBM = 16 * 2**30
+
+#: one-line "what would move the dominant term" note per dominant kind
+LEVERS = {
+    "compute": "raise useful-FLOP fraction: selective remat policy, drop capacity padding, fuse small ops",
+    "memory": "cut bytes: chunked/flash attention (no S^2 scores in HBM), fused norms, bf16 masks",
+    "collective": "cut traffic: sequence-sharded residuals, overlap a2a with expert FFN, pod-local reductions",
+}
+
+
+def load(path="results/dryrun.json") -> dict:
+    p = Path(path)
+    if not p.exists():
+        return {}
+    return json.loads(p.read_text())
+
+
+def rows(results: dict, mesh: str = "single") -> list[dict]:
+    out = []
+    for key, cell in sorted(results.items()):
+        if cell.get("skip") or cell.get("error"):
+            continue
+        if cell.get("mesh") != mesh:
+            continue
+        r = cell["roofline"]
+        peak = cell["memory"]["peak_bytes_per_dev"]
+        out.append({
+            "arch": cell["arch"],
+            "shape": cell["shape"],
+            "kind": cell["kind"],
+            "compute_ms": round(r["compute_s"] * 1e3, 2),
+            "memory_ms": round(r["memory_s"] * 1e3, 2),
+            "collective_ms": round(r["collective_s"] * 1e3, 2),
+            "dominant": r["dominant"],
+            "useful_ratio": round(r["useful_ratio"], 3) if r.get("useful_ratio") else None,
+            "peak_GiB": round(peak / 2**30, 2),
+            "fits_v5e": peak <= V5E_HBM,
+            "microbatches": cell.get("microbatches", 1),
+            "lever": LEVERS[r["dominant"]],
+        })
+    return out
+
+
+def summarize(path="results/dryrun.json") -> dict:
+    results = load(path)
+    single = rows(results, "single")
+    multi = rows(results, "multi")
+    errors = {k: v["error"] for k, v in results.items() if isinstance(v, dict) and v.get("error")}
+    skips = [k for k, v in results.items() if isinstance(v, dict) and v.get("skip")]
+    return {
+        "single_pod": single,
+        "multi_pod_compiled": len(multi),
+        "errors": errors,
+        "skips": skips,
+        "cells_single": len(single),
+    }
+
+
+def print_table(path="results/dryrun.json") -> None:
+    s = summarize(path)
+    hdr = f"{'arch':22s} {'shape':12s} {'cmp_ms':>9s} {'mem_ms':>9s} {'col_ms':>9s} {'dom':>10s} {'useful':>7s} {'GiB/dev':>8s} fits µ"
+    print(hdr)
+    print("-" * len(hdr))
+    for r in s["single_pod"]:
+        print(
+            f"{r['arch']:22s} {r['shape']:12s} {r['compute_ms']:9.1f} "
+            f"{r['memory_ms']:9.1f} {r['collective_ms']:9.1f} {r['dominant']:>10s} "
+            f"{(r['useful_ratio'] if r['useful_ratio'] is not None else -1):7.3f} "
+            f"{r['peak_GiB']:8.2f} {'y' if r['fits_v5e'] else 'N'} {r['microbatches']}"
+        )
+    print(f"\nmulti-pod cells compiled: {s['multi_pod_compiled']}")
+    if s["errors"]:
+        print(f"ERRORS: {list(s['errors'])}")
+    if s["skips"]:
+        print(f"skips (long_500k full-attn): {len(s['skips'])}")
+
+
+if __name__ == "__main__":
+    print_table()

@@ -1,0 +1,82 @@
+"""Benchmark harness: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One module per claim in the paper (§ refs in each module's docstring):
+
+  rolling_dsl      §3.1.6  DSL-optimized aggregation vs black-box UDF
+  pit_retrieval    §4.4    point-in-time offline retrieval throughput
+  online_store     §2.1/§4.5  online GET latency + Algorithm-2 merge + staleness
+  materialization  §4.3/§4.5.4  pipeline throughput, backfill, fault injection
+  geo              §4.1.2  cross-region access vs geo-replication + stragglers
+  roofline         (g)     §Roofline table from the dry-run artifacts
+
+Writes results/benchmarks.json; ``--only <name>`` runs a subset; ``--fast``
+shrinks workloads (CI).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma-separated subset")
+    ap.add_argument("--fast", action="store_true", help="small workloads (CI)")
+    ap.add_argument("--out", default="results/benchmarks.json")
+    args = ap.parse_args()
+
+    from benchmarks import (  # noqa: PLC0415 — import after arg parsing
+        bench_geo,
+        bench_materialization,
+        bench_online_store,
+        bench_pit_retrieval,
+        bench_rolling_dsl,
+        roofline_summary,
+    )
+
+    suites = {
+        "rolling_dsl": lambda: bench_rolling_dsl.run(
+            sizes=(2_000, 10_000) if args.fast else (2_000, 10_000, 50_000)
+        ),
+        "pit_retrieval": lambda: bench_pit_retrieval.run(
+            spine_sizes=(1_000,) if args.fast else (1_000, 10_000)
+        ),
+        "online_store": lambda: bench_online_store.run(
+            entity_counts=(1_000,) if args.fast else (1_000, 10_000)
+        ),
+        "materialization": lambda: bench_materialization.run(
+            hours=6 if args.fast else 16
+        ),
+        "geo": bench_geo.run,
+        "roofline": lambda: roofline_summary.summarize(),
+    }
+    only = {s for s in args.only.split(",") if s}
+    results: dict = {}
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        print(f"=== bench: {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            results[name] = {"ok": True, "wall_s": None, "result": fn()}
+            results[name]["wall_s"] = round(time.time() - t0, 2)
+            print(json.dumps(results[name]["result"], indent=1, default=str)[:2000])
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            results[name] = {"ok": False, "error": f"{type(e).__name__}: {e}"}
+
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(results, indent=1, default=str))
+    print(f"\nwrote {out}")
+    failed = [n for n, r in results.items() if not r.get("ok")]
+    if failed:
+        raise SystemExit(f"benchmark failures: {failed}")
+
+
+if __name__ == "__main__":
+    main()

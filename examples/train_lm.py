@@ -1,0 +1,38 @@
+"""End-to-end training driver example: feature store as the LM data plane.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+
+Trains a reduced gemma-2b on token-chunk events materialized through the
+feature store (point-in-time retrieval — the model can never see tokens
+newer than the loader's data clock), with checkpointing.  Demonstrates the
+fault-tolerance story end-to-end:
+
+    python examples/train_lm.py --steps 200 --ckpt-dir /tmp/ex_run --kill-at 120
+    python examples/train_lm.py --steps 200 --ckpt-dir /tmp/ex_run
+        # -> restores step 100 checkpoint, finishes 200, same final loss as
+        #    an uninterrupted run (integration-tested).
+
+The ~100M-parameter configuration from the assignment brief is
+``--arch gemma3-1b --full --batch 8 --seq 512`` on real hardware; the default
+here is CPU-sized.  This is a thin veneer over repro.launch.train (the real
+driver) so the example and the production entry point cannot drift.
+"""
+
+import sys
+
+from repro.launch import train
+
+
+def main():
+    argv = sys.argv[1:] or ["--steps", "200", "--batch", "4", "--seq", "128",
+                            "--arch", "gemma-2b", "--log-every", "20"]
+    result = train.main(argv)
+    print(
+        f"\nexample complete: {result['steps_run']} steps, "
+        f"loss {result['first_loss']:.3f} -> {result['last_loss']:.3f}"
+    )
+    assert result["last_loss"] < result["first_loss"], "loss must decrease"
+
+
+if __name__ == "__main__":
+    main()

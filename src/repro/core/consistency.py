@@ -1,0 +1,130 @@
+"""Offline/online consistency machinery (paper §4.5.2, §4.5.4, §4.5.5).
+
+  * ``check_consistency`` — the §4.5.2 invariant: for every ID the online
+    store holds exactly the offline store's max(tuple(event_ts, creation_ts))
+    record (modulo TTL).  This is the "no online/offline skew" test surface.
+  * ``bootstrap_offline_to_online`` — read latest-per-ID from offline, dump
+    to online (cheap direction).
+  * ``bootstrap_online_to_offline`` — dump everything online into offline.
+
+Both bootstraps reuse the Algorithm-2 merges, so they are idempotent and
+safe to retry — consistent with the §4.5.4 eventual-consistency story.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.assets import FeatureSetSpec
+from repro.core.offline_store import CREATION_TS, EVENT_TS, OfflineStore
+from repro.core.online_store import OnlineStore
+from repro.core.table import Table
+
+__all__ = [
+    "ConsistencyReport",
+    "check_consistency",
+    "bootstrap_offline_to_online",
+    "bootstrap_online_to_offline",
+]
+
+
+@dataclasses.dataclass
+class ConsistencyReport:
+    consistent: bool
+    checked_ids: int
+    missing_online: list[int]
+    stale_online: list[int]
+    missing_offline: list[int]
+
+    def summary(self) -> str:
+        if self.consistent:
+            return f"consistent ({self.checked_ids} ids)"
+        return (
+            f"INCONSISTENT: missing_online={len(self.missing_online)} "
+            f"stale_online={len(self.stale_online)} "
+            f"missing_offline={len(self.missing_offline)}"
+        )
+
+
+def check_consistency(
+    spec: FeatureSetSpec, offline: OfflineStore, online: OnlineStore
+) -> ConsistencyReport:
+    latest = offline.latest_per_key(spec.name, spec.version)
+    online_dump = online.dump_all(spec.name, spec.version)
+    on_map = {
+        int(k): (int(ev), int(cr))
+        for k, ev, cr in zip(
+            online_dump["__key__"], online_dump[EVENT_TS], online_dump[CREATION_TS]
+        )
+    }
+    missing_online, stale_online = [], []
+    off_keys = set()
+    for i in range(len(latest)):
+        k = int(latest["__key__"][i])
+        off_keys.add(k)
+        want = (int(latest[EVENT_TS][i]), int(latest[CREATION_TS][i]))
+        got = on_map.get(k)
+        if got is None:
+            missing_online.append(k)
+        elif got != want:
+            stale_online.append(k)
+    missing_offline = [k for k in on_map if k not in off_keys]
+    ok = not (missing_online or stale_online or missing_offline)
+    return ConsistencyReport(
+        ok, len(off_keys), missing_online, stale_online, missing_offline
+    )
+
+
+def bootstrap_offline_to_online(
+    spec: FeatureSetSpec, offline: OfflineStore, online: OnlineStore, now: int
+) -> int:
+    """§4.5.5: for each ID take max(tuple(event_ts, creation_ts)) from the
+    offline history and merge into the online store.  The merge preserves the
+    ORIGINAL creation timestamps (a bootstrap is a copy, not a new
+    materialization), replayed in creation order so Algorithm 2 semantics
+    hold even against records already present online."""
+    latest = offline.latest_per_key(spec.name, spec.version)
+    online.register(spec)
+    n = 0
+    # Replay grouped by creation_ts so each merge call has one creation time.
+    for cr in np.unique(latest[CREATION_TS]) if len(latest) else []:
+        sub = latest.filter(latest[CREATION_TS] == cr)
+        frame = _as_feature_frame(spec, sub)
+        online.merge(spec, frame, int(cr))
+        n += len(sub)
+    return n
+
+
+def bootstrap_online_to_offline(
+    spec: FeatureSetSpec, offline: OfflineStore, online: OnlineStore
+) -> int:
+    """§4.5.5: dump everything in the online store into the offline store."""
+    dump = online.dump_all(spec.name, spec.version)
+    offline.register(spec)
+    n = 0
+    for cr in np.unique(dump[CREATION_TS]) if len(dump) else []:
+        sub = dump.filter(dump[CREATION_TS] == cr)
+        frame = _as_feature_frame(spec, sub)
+        offline.merge(spec, frame, int(cr))
+        n += len(sub)
+    return n
+
+
+def _as_feature_frame(spec: FeatureSetSpec, records: Table) -> Table:
+    """Records (with __key__/event_ts) -> the transform-output frame shape.
+
+    Only valid for single-join-key specs whose key is the raw ID; composite
+    keys cannot be inverted from the surrogate, so bootstraps for them carry
+    the surrogate key column through (documented limitation of the codec)."""
+    cols = {}
+    if len(spec.index_columns) == 1:
+        cols[spec.index_columns[0]] = records["__key__"]
+    else:  # surrogate passthrough
+        for c in spec.index_columns:
+            cols[c] = records["__key__"]
+    cols[spec.timestamp_col] = records[EVENT_TS]
+    for f in spec.features:
+        cols[f.name] = records[f.name]
+    return Table(cols)

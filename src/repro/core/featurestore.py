@@ -1,0 +1,232 @@
+"""The managed feature store facade (paper §2.1 functional surface).
+
+Wires every subsystem together behind the operations the paper lists:
+feature store management, asset management, feature engineering (scheduled +
+backfill materialization, offline PIT retrieval, online retrieval),
+monitoring/lineage, and geo-distributed access.  This is also the object the
+training/serving launchers consume as their data plane.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.core.assets import Entity, FeatureSetSpec, MaterializationSettings
+from repro.core.consistency import (
+    bootstrap_offline_to_online,
+    bootstrap_online_to_offline,
+    check_consistency,
+)
+from repro.core.lineage import LineageGraph, ModelNode
+from repro.core.materializer import FaultInjector, Materializer
+from repro.core.monitoring import HealthMonitor
+from repro.core.offline_store import OfflineStore
+from repro.core.online_store import OnlineStore
+from repro.core.pit import get_offline_features
+from repro.core.registry import AssetRegistry, Workspace
+from repro.core.regions import (
+    GeoPlacement,
+    GeoTopology,
+    Region,
+    ReplicationPolicy,
+)
+from repro.core.scheduler import Scheduler
+from repro.core.table import Table
+from repro.core.transform import FeatureWindow, SourceProtocol
+
+__all__ = ["FeatureStore"]
+
+
+class FeatureStore:
+    def __init__(
+        self,
+        name: str,
+        *,
+        region: str = "region-0",
+        subscription: str = "sub-0",
+        topology: Optional[GeoTopology] = None,
+        replication: ReplicationPolicy = ReplicationPolicy.CROSS_REGION_ACCESS,
+        clock: Optional[Callable[[], int]] = None,
+        offline_shards: int = 4,
+        online_partitions: int = 16,
+        interpret: bool = True,
+    ) -> None:
+        self.name = name
+        self._now = 0
+        self.clock = clock or (lambda: self._now)
+        self.registry = AssetRegistry(name, region, subscription)
+        self.offline = OfflineStore(num_shards=offline_shards)
+        self.online = OnlineStore(
+            num_partitions=online_partitions, interpret=interpret
+        )
+        self.scheduler = Scheduler()
+        self.monitor = HealthMonitor()
+        self.lineage = LineageGraph()
+        self.faults = FaultInjector()
+        self.materializer = Materializer(
+            self.offline, self.online, clock=self.clock, faults=self.faults
+        )
+        if topology is None:
+            topology = GeoTopology(regions={region: Region(region)})
+        self.geo = GeoPlacement(topology, region, replication)
+        self._sources: dict[str, SourceProtocol] = {}
+        self.interpret = interpret
+
+        from repro.runtime.supervisor import Supervisor  # avoid cycle
+
+        self.supervisor = Supervisor(
+            self.scheduler,
+            self.materializer,
+            self.monitor,
+            spec_resolver=self.registry.get_feature_set,
+            source_resolver=lambda n: self._sources[n],
+        )
+
+    # -- clock (tests drive time explicitly) ---------------------------------
+    def advance_clock(self, to: int) -> None:
+        self._now = max(self._now, to)
+
+    # -- asset management ------------------------------------------------------
+    def register_source(self, source: SourceProtocol) -> None:
+        self._sources[source.name] = source
+
+    def create_entity(self, entity: Entity) -> Entity:
+        return self.registry.create_entity(entity)
+
+    def create_feature_set(self, spec: FeatureSetSpec) -> FeatureSetSpec:
+        spec = self.registry.create_feature_set(spec)
+        if spec.source_name not in self._sources:
+            raise ValueError(f"register source {spec.source_name!r} first")
+        self.offline.register(spec)
+        if spec.materialization.online_enabled:
+            self.online.register(spec)
+        self.scheduler.register_feature_set(
+            spec.name,
+            spec.version,
+            schedule_interval=spec.materialization.schedule_interval,
+            partition_window=spec.materialization.partition_window,
+        )
+        return spec
+
+    # -- feature engineering -----------------------------------------------------
+    def tick(self, now: Optional[int] = None) -> dict[str, int]:
+        """Advance the schedule clock: generate due incremental jobs and drain
+        the queue (recurrent materialization, §2.1)."""
+        if now is not None:
+            self.advance_clock(now)
+        self.scheduler.tick(self.clock())
+        stats = self.supervisor.drain()
+        self._refresh_staleness()
+        return stats
+
+    def backfill(
+        self, name: str, version: int, start: int, end: int
+    ) -> dict[str, int]:
+        """On-demand backfill materialization (§2.1, §4.3)."""
+        self.scheduler.request_backfill(name, version, FeatureWindow(start, end))
+        stats = self.supervisor.drain()
+        self.scheduler.resume_suspended()
+        stats2 = self.supervisor.drain()
+        self._refresh_staleness()
+        return {k: stats[k] + stats2[k] for k in stats}
+
+    def repair(self, name: str, version: int) -> dict[str, int]:
+        """Re-enqueue every unmaterialized gap behind the schedule cursor as
+        backfill jobs — the §4.5.2 'manual retry' that guarantees eventual
+        consistency even after jobs exhaust their automatic retry budget.
+        Fresh jobs get a fresh retry budget; merge idempotence makes any
+        overlap with earlier partial progress safe."""
+        cursor = self.scheduler.schedule_cursor.get((name, version), 0)
+        if cursor <= 0:
+            return {"succeeded": 0, "retried": 0, "failed": 0}
+        self.scheduler.request_backfill(name, version, FeatureWindow(0, cursor))
+        stats = self.supervisor.drain()
+        self.scheduler.resume_suspended()
+        stats2 = self.supervisor.drain()
+        self._refresh_staleness()
+        return {k: stats[k] + stats2[k] for k in stats}
+
+    def get_offline_features(
+        self,
+        spine: Table,
+        feature_sets: Sequence[tuple[str, int]],
+        *,
+        spine_ts_col: str = "ts",
+        use_kernel: bool = True,
+    ) -> Table:
+        """Point-in-time correct offline retrieval (§2.1 item 3, §4.4)."""
+        specs = [self.registry.get_feature_set(n, v) for n, v in feature_sets]
+        return get_offline_features(
+            self.offline,
+            spine,
+            specs,
+            spine_ts_col=spine_ts_col,
+            interpret=self.interpret,
+            use_kernel=use_kernel,
+        )
+
+    def get_online_features(
+        self,
+        name: str,
+        version: int,
+        id_columns: list[np.ndarray],
+        *,
+        use_kernel: bool = True,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Low-latency online retrieval (§2.1 item 4)."""
+        import time as _time
+
+        t0 = _time.perf_counter()
+        out = self.online.lookup(
+            name, version, id_columns, now=self.clock(), use_kernel=use_kernel
+        )
+        self.monitor.record_lookup_latency((_time.perf_counter() - t0) * 1e6)
+        return out
+
+    # -- consistency & bootstrap ----------------------------------------------------
+    def check_consistency(self, name: str, version: int):
+        spec = self.registry.get_feature_set(name, version)
+        return check_consistency(spec, self.offline, self.online)
+
+    def enable_online(self, name: str, version: int) -> int:
+        """Late-enable the online store and bootstrap it from offline (§4.5.5)."""
+        spec = self.registry.get_feature_set(name, version)
+        spec.materialization.online_enabled = True
+        self.online.register(spec)
+        return bootstrap_offline_to_online(
+            spec, self.offline, self.online, self.clock()
+        )
+
+    def enable_offline(self, name: str, version: int) -> int:
+        """Late-enable the offline store and bootstrap it from online (§4.5.5)."""
+        spec = self.registry.get_feature_set(name, version)
+        spec.materialization.offline_enabled = True
+        self.offline.register(spec)
+        return bootstrap_online_to_offline(spec, self.offline, self.online)
+
+    # -- lineage -----------------------------------------------------------------
+    def track_model(
+        self, model: ModelNode, feature_sets: Sequence[tuple[str, int]]
+    ) -> None:
+        refs = []
+        for n, v in feature_sets:
+            spec = self.registry.get_feature_set(n, v)
+            refs.extend(spec.full_feature_names())
+        self.lineage.register_model(model, refs)
+
+    # -- internals ------------------------------------------------------------------
+    def _refresh_staleness(self) -> None:
+        now = self.clock()
+        for name, version in self.registry.list_feature_sets():
+            ms = self.scheduler.staleness(name, version, now)
+            self.monitor.record_staleness(name, version, ms)
+
+    # -- state checkpoint (resume without data loss) ----------------------------------
+    def scheduler_state(self) -> str:
+        return self.scheduler.to_json()
+
+    def restore_scheduler(self, payload: str) -> None:
+        self.scheduler = Scheduler.from_json(payload)
+        self.supervisor.scheduler = self.scheduler

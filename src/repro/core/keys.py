@@ -1,0 +1,46 @@
+"""Record-key codec shared by both stores.
+
+The paper keys records by "ID(s)" — one or more index columns (§4.5.1).  The
+stores operate on a single int64 surrogate key: a single integer join key maps
+identically (so tests/debugging stay transparent); composite keys are mixed
+into 64 bits (splitmix64) — a documented collision assumption at ~2^-64 per
+pair, the standard trade for fixed-width device-side key tables.
+Live keys are forced non-negative so the online store's -1 sentinel is safe.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["encode_keys"]
+
+_C1 = np.uint64(0xBF58476D1CE4E5B9)
+_C2 = np.uint64(0x94D049BB133111EB)
+
+
+def _splitmix64(x: np.ndarray) -> np.ndarray:
+    z = x + np.uint64(0x9E3779B97F4A7C15)
+    z = (z ^ (z >> np.uint64(30))) * _C1
+    z = (z ^ (z >> np.uint64(27))) * _C2
+    return z ^ (z >> np.uint64(31))
+
+
+def encode_keys(columns: list[np.ndarray]) -> np.ndarray:
+    """Combine one or more ID columns into non-negative int64 keys."""
+    if len(columns) == 1 and np.issubdtype(np.asarray(columns[0]).dtype, np.integer):
+        vals = np.asarray(columns[0], dtype=np.int64)
+        if (vals >= 0).all():
+            return vals
+    acc = np.zeros(len(columns[0]), dtype=np.uint64)
+    with np.errstate(over="ignore"):
+        for col in columns:
+            col = np.asarray(col)
+            if np.issubdtype(col.dtype, np.integer):
+                h = _splitmix64(col.astype(np.int64).view(np.uint64))
+            else:
+                h = np.asarray(
+                    [np.uint64(hash(str(v)) & 0x7FFFFFFFFFFFFFFF) for v in col]
+                )
+                h = _splitmix64(h)
+            acc = _splitmix64(acc ^ h)
+    return (acc >> np.uint64(1)).view(np.int64)  # clear sign bit

@@ -1,0 +1,111 @@
+"""Materialization job execution (paper §4.3, §4.5.3–4.5.4).
+
+A job covers one feature window: run Algorithm 1, then merge the resulting
+frame into the offline and/or online store — the SAME frame into both, which
+is what makes the two stores eventually consistent (§4.5.4).  Failures may
+strike between the two merges; merge idempotence (offline full-key dedup,
+online latest-wins) guarantees retries converge.
+
+``FaultInjector`` lets tests and benchmarks break the pipeline at the exact
+seams the paper discusses: after compute, after the offline merge, after the
+online merge.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+from repro.core.assets import FeatureSetSpec, StoreKind
+from repro.core.offline_store import OfflineStore
+from repro.core.online_store import OnlineStore
+from repro.core.scheduler import MaterializationJob
+from repro.core.table import Table
+from repro.core.transform import SourceProtocol, compute_feature_window
+
+__all__ = ["FaultInjector", "Materializer", "MaterializationOutcome"]
+
+
+class FaultInjector:
+    """Deterministic failure injection at named seams.
+
+    Two modes, composable: ``arm(seam, n)`` fails the next n passes through
+    one seam (targeted tests); ``set_failure_rate(p, seed)`` makes every seam
+    fail with probability p from a seeded stream (chaos benchmarks — still
+    reproducible)."""
+
+    def __init__(self) -> None:
+        self._arm: dict[str, int] = {}
+        self._rate = 0.0
+        self._rng = None
+
+    def arm(self, seam: str, times: int = 1) -> None:
+        self._arm[seam] = self._arm.get(seam, 0) + times
+
+    def set_failure_rate(self, p: float, *, seed: int = 0) -> None:
+        import numpy as _np
+
+        self._rate = float(p)
+        self._rng = _np.random.default_rng(seed)
+
+    def check(self, seam: str) -> None:
+        if self._arm.get(seam, 0) > 0:
+            self._arm[seam] -= 1
+            raise RuntimeError(f"injected fault at seam {seam!r}")
+        if self._rate and self._rng is not None and self._rng.random() < self._rate:
+            raise RuntimeError(f"injected fault (p={self._rate}) at seam {seam!r}")
+
+
+@dataclasses.dataclass
+class MaterializationOutcome:
+    job_id: int
+    rows: int
+    offline_merged: bool
+    online_merged: bool
+    creation_ts: int
+
+
+class Materializer:
+    def __init__(
+        self,
+        offline: OfflineStore,
+        online: OnlineStore,
+        *,
+        clock: Callable[[], int],
+        faults: Optional[FaultInjector] = None,
+    ) -> None:
+        self.offline = offline
+        self.online = online
+        self.clock = clock
+        self.faults = faults or FaultInjector()
+        self.outcomes: list[MaterializationOutcome] = []
+
+    def run_job(
+        self,
+        job: MaterializationJob,
+        spec: FeatureSetSpec,
+        source: SourceProtocol,
+    ) -> MaterializationOutcome:
+        """Execute one job; raises on (injected or real) failure.  The paper's
+        merge order — offline first, then online — is fixed, which is one of
+        the §4.5.4 reasons the stores are only EVENTUALLY consistent."""
+        self.faults.check("before_compute")
+        frame = compute_feature_window(spec, source, job.window)
+        self.faults.check("after_compute")
+
+        creation_ts = int(self.clock())
+        offline_done = online_done = False
+        if spec.materialization.offline_enabled:
+            self.offline.merge(spec, frame, creation_ts)
+            offline_done = True
+        self.faults.check("between_merges")
+        if spec.materialization.online_enabled:
+            self.online.merge(spec, frame, creation_ts)
+            online_done = True
+        self.faults.check("after_merges")
+
+        outcome = MaterializationOutcome(
+            job.job_id, len(frame), offline_done, online_done, creation_ts
+        )
+        self.outcomes.append(outcome)
+        return outcome

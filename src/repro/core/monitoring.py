@@ -1,0 +1,88 @@
+"""Health/monitoring subsystem (paper §3.1.2, §2.1 SLAs).
+
+Built-in (system) metrics plus custom (user-defined) metrics, and the
+paper's headline SLA metric: DATA STALENESS/FRESHNESS — how fresh the
+feature data computed by the platform is.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Callable, Optional
+
+__all__ = ["Metrics", "HealthMonitor"]
+
+
+@dataclasses.dataclass
+class _Histogram:
+    values: list[float] = dataclasses.field(default_factory=list)
+
+    def observe(self, v: float) -> None:
+        self.values.append(v)
+
+    def percentile(self, p: float) -> float:
+        if not self.values:
+            return float("nan")
+        xs = sorted(self.values)
+        i = min(len(xs) - 1, int(p / 100.0 * len(xs)))
+        return xs[i]
+
+
+class Metrics:
+    def __init__(self) -> None:
+        self.counters: dict[str, float] = defaultdict(float)
+        self.gauges: dict[str, float] = {}
+        self.histograms: dict[str, _Histogram] = defaultdict(_Histogram)
+
+    def inc(self, name: str, by: float = 1.0) -> None:
+        self.counters[name] += by
+
+    def set_gauge(self, name: str, value: float) -> None:
+        self.gauges[name] = value
+
+    def observe(self, name: str, value: float) -> None:
+        self.histograms[name].observe(value)
+
+    def snapshot(self) -> dict:
+        return {
+            "counters": dict(self.counters),
+            "gauges": dict(self.gauges),
+            "histograms": {
+                k: {"p50": h.percentile(50), "p99": h.percentile(99), "n": len(h.values)}
+                for k, h in self.histograms.items()
+            },
+        }
+
+
+class HealthMonitor:
+    """System + custom metrics, alerting, and staleness tracking."""
+
+    def __init__(self, alert_hook: Optional[Callable[[str], None]] = None):
+        self.system = Metrics()
+        self.custom = Metrics()
+        self.alerts: list[str] = []
+        self._alert_hook = alert_hook
+
+    def alert(self, message: str) -> None:
+        self.alerts.append(message)
+        if self._alert_hook:
+            self._alert_hook(message)
+
+    # -- built-in signal helpers ------------------------------------------------
+    def record_job(self, success: bool, retried: bool = False) -> None:
+        self.system.inc("jobs_succeeded" if success else "jobs_failed")
+        if retried:
+            self.system.inc("jobs_retried")
+
+    def record_staleness(self, feature_set: str, version: int, ms: Optional[int]) -> None:
+        if ms is not None:
+            self.system.set_gauge(f"staleness_ms/{feature_set}:v{version}", float(ms))
+
+    def record_lookup_latency(self, us: float) -> None:
+        self.system.observe("online_lookup_us", us)
+
+    def healthy(self) -> bool:
+        failed = self.system.counters.get("jobs_failed", 0)
+        ok = self.system.counters.get("jobs_succeeded", 0)
+        return failed == 0 or ok / max(ok + failed, 1) > 0.95

@@ -1,0 +1,166 @@
+"""Offline store (paper §3.1.4, §4.5) — the ADLS/Delta analogue.
+
+Semantics reproduced exactly:
+  * records are keyed by IDs + event_timestamp + creation_timestamp;
+  * the store keeps EVERY record per ID over time (append-only history);
+  * Algorithm 2, offline branch: insert iff the full key does not exist,
+    otherwise no-op (idempotent merges make job retries safe — the basis of
+    the §4.5.4 eventual-consistency argument);
+  * storage partitioning: rows are hash-partitioned by entity key into
+    ``num_shards`` shards (the unit of parallel/distributed reads) and each
+    shard tracks time-partition statistics (the Delta-table analogue).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional
+
+import numpy as np
+
+from repro.core.assets import FeatureSetSpec
+from repro.core.keys import encode_keys
+from repro.core.table import Table, concat_tables
+from repro.kernels.online_lookup.ops import partition_of
+
+__all__ = ["OfflineStore", "EVENT_TS", "CREATION_TS"]
+
+EVENT_TS = "event_ts"
+CREATION_TS = "creation_ts"
+
+
+def _record_schema(spec: FeatureSetSpec) -> dict[str, np.dtype]:
+    schema: dict[str, np.dtype] = {"__key__": np.dtype(np.int64)}
+    for k in spec.index_columns:
+        schema[k] = np.dtype(np.int64)
+    schema[EVENT_TS] = np.dtype(np.int64)
+    schema[CREATION_TS] = np.dtype(np.int64)
+    for f in spec.features:
+        schema[f.name] = f.np_dtype()
+    return schema
+
+
+@dataclasses.dataclass
+class _Shard:
+    table: Table
+    # full-key set for O(1) idempotent-merge checks
+    keys: set[tuple[int, int, int]] = dataclasses.field(default_factory=set)
+
+
+class OfflineStore:
+    """Append-only, history-complete feature record store."""
+
+    def __init__(self, num_shards: int = 4, time_partition: int = 86_400_000):
+        self.num_shards = num_shards
+        self.time_partition = time_partition
+        self._shards: dict[tuple[str, int], list[_Shard]] = {}
+        self._specs: dict[tuple[str, int], FeatureSetSpec] = {}
+        self.rows_merged = 0
+        self.rows_deduped = 0
+
+    # -- lifecycle ----------------------------------------------------------
+    def register(self, spec: FeatureSetSpec) -> None:
+        key = spec.key
+        if key in self._shards:
+            return
+        schema = _record_schema(spec)
+        self._shards[key] = [
+            _Shard(Table.empty(schema)) for _ in range(self.num_shards)
+        ]
+        self._specs[key] = spec
+
+    def has(self, name: str, version: int) -> bool:
+        return (name, version) in self._shards
+
+    # -- Algorithm 2, offline branch -----------------------------------------
+    def merge(self, spec: FeatureSetSpec, frame: Table, creation_ts: int) -> int:
+        """Merge a materialization-job output frame.  ``frame`` carries index
+        columns + event timestamp + features; the store stamps creation_ts
+        (the materialization time, always > event_ts).  Returns #rows inserted.
+        """
+        self.register(spec)
+        n = len(frame)
+        if n == 0:
+            return 0
+        ids = encode_keys([frame[c] for c in spec.index_columns])
+        event_ts = frame[spec.timestamp_col].astype(np.int64)
+        if (creation_ts <= event_ts).any():
+            raise ValueError(
+                "creation_timestamp must exceed every event_timestamp (§4.5.1)"
+            )
+        shard_of = partition_of(ids, self.num_shards)
+        inserted = 0
+        for s in range(self.num_shards):
+            mask = shard_of == s
+            if not mask.any():
+                continue
+            shard = self._shards[spec.key][s]
+            sub_ids = ids[mask]
+            sub_ev = event_ts[mask]
+            keep = np.zeros(mask.sum(), dtype=bool)
+            for i, (k, ev) in enumerate(zip(sub_ids, sub_ev)):
+                full = (int(k), int(ev), creation_ts)
+                if full not in shard.keys:
+                    shard.keys.add(full)
+                    keep[i] = True
+            self.rows_deduped += int((~keep).sum())
+            if not keep.any():
+                continue
+            sub = frame.filter(mask).filter(keep)
+            cols = {"__key__": sub_ids[keep]}
+            for c in spec.index_columns:
+                cols[c] = sub[c].astype(np.int64)
+            cols[EVENT_TS] = sub[spec.timestamp_col].astype(np.int64)
+            cols[CREATION_TS] = np.full(len(sub), creation_ts, np.int64)
+            for f in spec.features:
+                cols[f.name] = sub[f.name].astype(f.np_dtype())
+            shard.table = concat_tables([shard.table, Table(cols)])
+            inserted += len(sub)
+        self.rows_merged += inserted
+        return inserted
+
+    # -- reads ---------------------------------------------------------------
+    def read(
+        self,
+        name: str,
+        version: int,
+        window: Optional[tuple[int, int]] = None,
+        shards: Optional[Iterable[int]] = None,
+    ) -> Table:
+        """Full history (optionally clipped to an event-ts window / shard set)."""
+        shard_list = list(shards) if shards is not None else range(self.num_shards)
+        parts = [self._shards[(name, version)][s].table for s in shard_list]
+        out = concat_tables(parts)
+        if window is not None and len(out):
+            ev = out[EVENT_TS]
+            out = out.filter((ev >= window[0]) & (ev < window[1]))
+        return out
+
+    def latest_per_key(self, name: str, version: int) -> Table:
+        """max(tuple(event_ts, creation_ts)) per ID — the §4.5.5
+        offline→online bootstrap read."""
+        t = self.read(name, version)
+        if len(t) == 0:
+            return t
+        order = np.lexsort((t[CREATION_TS], t[EVENT_TS], t["__key__"]))
+        t = t.take(order)
+        keys = t["__key__"]
+        is_last = np.ones(len(t), dtype=bool)
+        is_last[:-1] = keys[:-1] != keys[1:]
+        return t.filter(is_last)
+
+    def num_rows(self, name: str, version: int) -> int:
+        return sum(len(s.table) for s in self._shards[(name, version)])
+
+    def max_event_ts(self, name: str, version: int) -> Optional[int]:
+        t = self.read(name, version)
+        return int(t[EVENT_TS].max()) if len(t) else None
+
+    def time_partitions(self, name: str, version: int) -> dict[int, int]:
+        """Rows per time partition (Delta-style file statistics)."""
+        t = self.read(name, version)
+        if len(t) == 0:
+            return {}
+        part = t[EVENT_TS] // self.time_partition
+        uniq, counts = np.unique(part, return_counts=True)
+        return {int(u): int(c) for u, c in zip(uniq, counts)}

@@ -1,0 +1,261 @@
+"""Online store (paper §3.1.4, §4.5) — the Redis analogue, TPU-hosted.
+
+Semantics reproduced exactly:
+  * keeps ONLY the latest record per ID: max(tuple(event_ts, creation_ts));
+  * Algorithm 2, online branch:
+      - key absent            -> insert
+      - new event_ts >  old   -> override
+      - new event_ts == old and new creation_ts > old -> override
+      - otherwise             -> no-op
+  * TTL (§4.5.2 "assuming TTL satisfies"): records expire ``ttl`` ms after
+    their creation_timestamp; expired records are invisible to lookups and
+    reclaimed by ``sweep``.
+
+Layout: the paper's storage-partitioning scheme applied to device memory —
+hash-partitioned (P, C) slot tables whose key planes are exactly what the
+kernels/online_lookup Pallas kernel scans, plus (P, C, D) feature values.
+Batched GETs run through the kernel; merges are host-side (writes are the
+materialization path, reads are the latency path).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.assets import FeatureSetSpec
+from repro.core.keys import encode_keys
+from repro.core.offline_store import CREATION_TS, EVENT_TS
+from repro.core.table import Table
+from repro.kernels.online_lookup import ops as lookup_ops
+
+__all__ = ["OnlineStore"]
+
+
+@dataclasses.dataclass
+class _PartitionedTable:
+    keys_lo: np.ndarray      # (P, C) int32, -1 = empty
+    keys_hi: np.ndarray      # (P, C) int32
+    keys_full: np.ndarray    # (P, C) int64 (host-side truth)
+    event_ts: np.ndarray     # (P, C) int64
+    creation_ts: np.ndarray  # (P, C) int64
+    values: np.ndarray       # (P, C, D) float32
+    fill: np.ndarray         # (P,) int64 next free slot per partition
+    slot_of: dict[int, tuple[int, int]]  # id -> (partition, slot)
+
+
+class OnlineStore:
+    def __init__(
+        self,
+        num_partitions: int = 16,
+        initial_capacity: int = 256,
+        *,
+        interpret: bool = True,
+    ):
+        self.num_partitions = num_partitions
+        self.initial_capacity = initial_capacity
+        self.interpret = interpret
+        self._tables: dict[tuple[str, int], _PartitionedTable] = {}
+        self._specs: dict[tuple[str, int], FeatureSetSpec] = {}
+        self.inserts = 0
+        self.overrides = 0
+        self.noops = 0
+
+    # -- lifecycle ----------------------------------------------------------
+    def register(self, spec: FeatureSetSpec) -> None:
+        key = spec.key
+        if key in self._tables:
+            return
+        p, c, d = self.num_partitions, self.initial_capacity, len(spec.features)
+        self._tables[key] = _PartitionedTable(
+            keys_lo=np.full((p, c), -1, np.int32),
+            keys_hi=np.full((p, c), -1, np.int32),
+            keys_full=np.full((p, c), -1, np.int64),
+            event_ts=np.zeros((p, c), np.int64),
+            creation_ts=np.zeros((p, c), np.int64),
+            values=np.zeros((p, c, d), np.float32),
+            fill=np.zeros(p, np.int64),
+            slot_of={},
+        )
+        self._specs[key] = spec
+
+    def has(self, name: str, version: int) -> bool:
+        return (name, version) in self._tables
+
+    def _grow(self, key: tuple[str, int]) -> None:
+        t = self._tables[key]
+        p, c = t.keys_lo.shape
+        grow = lambda a, fillv: np.concatenate(
+            [a, np.full_like(a, fillv)], axis=1
+        )
+        t.keys_lo = grow(t.keys_lo, -1)
+        t.keys_hi = grow(t.keys_hi, -1)
+        t.keys_full = grow(t.keys_full, -1)
+        t.event_ts = grow(t.event_ts, 0)
+        t.creation_ts = grow(t.creation_ts, 0)
+        t.values = np.concatenate([t.values, np.zeros_like(t.values)], axis=1)
+
+    # -- Algorithm 2, online branch -------------------------------------------
+    def merge(self, spec: FeatureSetSpec, frame: Table, creation_ts: int) -> None:
+        self.register(spec)
+        if len(frame) == 0:
+            return
+        t = self._tables[spec.key]
+        ids = encode_keys([frame[c] for c in spec.index_columns])
+        event_ts = frame[spec.timestamp_col].astype(np.int64)
+        feats = np.stack(
+            [frame[f.name].astype(np.float32) for f in spec.features], axis=1
+        )
+        parts = lookup_ops.partition_of(ids, self.num_partitions)
+        for i in range(len(ids)):
+            key_i, ev_i, p = int(ids[i]), int(event_ts[i]), int(parts[i])
+            existing = t.slot_of.get(key_i)
+            if existing is None:
+                if t.fill[p] >= t.keys_lo.shape[1]:
+                    self._grow(spec.key)
+                slot = int(t.fill[p])
+                lo, hi = lookup_ops.split_i64(np.asarray([key_i]))
+                t.keys_lo[p, slot] = lo[0]
+                t.keys_hi[p, slot] = hi[0]
+                t.keys_full[p, slot] = key_i
+                t.event_ts[p, slot] = ev_i
+                t.creation_ts[p, slot] = creation_ts
+                t.values[p, slot] = feats[i]
+                t.slot_of[key_i] = (p, slot)
+                t.fill[p] += 1
+                self.inserts += 1
+            else:
+                pp, slot = existing
+                old_ev = int(t.event_ts[pp, slot])
+                old_cr = int(t.creation_ts[pp, slot])
+                if ev_i > old_ev or (ev_i == old_ev and creation_ts > old_cr):
+                    t.event_ts[pp, slot] = ev_i
+                    t.creation_ts[pp, slot] = creation_ts
+                    t.values[pp, slot] = feats[i]
+                    self.overrides += 1
+                else:
+                    self.noops += 1
+
+    # -- reads ----------------------------------------------------------------
+    def lookup(
+        self,
+        name: str,
+        version: int,
+        id_columns: list[np.ndarray],
+        *,
+        now: Optional[int] = None,
+        use_kernel: bool = True,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Batched GET.  Returns (values (B, D) float32, found (B,) bool).
+        TTL-expired records count as not found."""
+        spec = self._specs[(name, version)]
+        t = self._tables[(name, version)]
+        ids = encode_keys(id_columns)
+        if use_kernel:
+            vals, found = lookup_ops.route_and_lookup(
+                t.keys_lo, t.keys_hi, t.values, ids, interpret=self.interpret
+            )
+            # TTL + record metadata need the slot: recompute host-side mask.
+            if now is not None and spec.materialization.online_ttl is not None:
+                ttl = spec.materialization.online_ttl
+                for i, k in enumerate(ids):
+                    s = t.slot_of.get(int(k))
+                    if s is not None and now - int(t.creation_ts[s[0], s[1]]) > ttl:
+                        found[i] = False
+                        vals[i] = 0.0
+            return vals, found
+        d = t.values.shape[-1]
+        vals = np.zeros((len(ids), d), np.float32)
+        found = np.zeros(len(ids), bool)
+        ttl = spec.materialization.online_ttl
+        for i, k in enumerate(ids):
+            s = t.slot_of.get(int(k))
+            if s is None:
+                continue
+            if (
+                now is not None
+                and ttl is not None
+                and now - int(t.creation_ts[s[0], s[1]]) > ttl
+            ):
+                continue
+            vals[i] = t.values[s[0], s[1]]
+            found[i] = True
+        return vals, found
+
+    def get_record(
+        self, name: str, version: int, id_columns: list[np.ndarray]
+    ) -> list[Optional[dict]]:
+        """Full records (event/creation ts + features) — used by tests and
+        the online→offline bootstrap."""
+        spec = self._specs[(name, version)]
+        t = self._tables[(name, version)]
+        ids = encode_keys(id_columns)
+        out: list[Optional[dict]] = []
+        for k in ids:
+            s = t.slot_of.get(int(k))
+            if s is None:
+                out.append(None)
+                continue
+            p, slot = s
+            out.append(
+                {
+                    "key": int(k),
+                    EVENT_TS: int(t.event_ts[p, slot]),
+                    CREATION_TS: int(t.creation_ts[p, slot]),
+                    "features": t.values[p, slot].copy(),
+                }
+            )
+        return out
+
+    def dump_all(self, name: str, version: int) -> Table:
+        """Everything currently live — the §4.5.5 online→offline bootstrap."""
+        spec = self._specs[(name, version)]
+        t = self._tables[(name, version)]
+        rows_k, rows_ev, rows_cr, rows_v = [], [], [], []
+        for k, (p, slot) in sorted(t.slot_of.items()):
+            rows_k.append(k)
+            rows_ev.append(int(t.event_ts[p, slot]))
+            rows_cr.append(int(t.creation_ts[p, slot]))
+            rows_v.append(t.values[p, slot])
+        cols: dict[str, np.ndarray] = {
+            "__key__": np.asarray(rows_k, np.int64).reshape(-1),
+            EVENT_TS: np.asarray(rows_ev, np.int64).reshape(-1),
+            CREATION_TS: np.asarray(rows_cr, np.int64).reshape(-1),
+        }
+        vals = (
+            np.stack(rows_v, axis=0)
+            if rows_v
+            else np.zeros((0, len(spec.features)), np.float32)
+        )
+        for j, f in enumerate(spec.features):
+            cols[f.name] = vals[:, j]
+        return Table(cols)
+
+    def num_records(self, name: str, version: int) -> int:
+        return len(self._tables[(name, version)].slot_of)
+
+    def sweep(self, name: str, version: int, now: int) -> int:
+        """Reclaim TTL-expired slots (compaction). Returns #evicted."""
+        spec = self._specs[(name, version)]
+        ttl = spec.materialization.online_ttl
+        if ttl is None:
+            return 0
+        t = self._tables[(name, version)]
+        evict = [
+            k
+            for k, (p, s) in t.slot_of.items()
+            if now - int(t.creation_ts[p, s]) > ttl
+        ]
+        for k in evict:
+            p, s = t.slot_of.pop(k)
+            t.keys_lo[p, s] = -1
+            t.keys_hi[p, s] = -1
+            t.keys_full[p, s] = -1
+        return len(evict)
+
+    # device mirror accessors for benchmarks
+    def device_tables(self, name: str, version: int):
+        t = self._tables[(name, version)]
+        return t.keys_lo, t.keys_hi, t.values

@@ -1,0 +1,143 @@
+"""Geo-distribution (paper §2.1 "Regional presence", §3.1.2–3.1.3, §4.1.2).
+
+Two access mechanisms for an asset living in one region, consumed in another:
+  * CROSS-REGION ACCESS — data stays where created; remote reads traverse the
+    inter-region link (the paper's implemented mechanism).
+  * GEO-REPLICATION — assets replicated into consumer regions for local-read
+    latency (the paper's road-map mechanism; ruled out where geo-fencing /
+    data-compliance forbids it).
+
+On the TPU substrate, regions map to the production mesh's ``pod`` axis
+(launch/mesh.py): replication = replicated sharding over ``pod``; cross-
+region access = collectives over ``pod``.  This module is the control plane:
+placement, replication policy, compliance fencing, health, fail-over, and a
+latency cost model so benchmarks can contrast the two mechanisms with the
+same numbers a WAN deployment would reason about.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+__all__ = [
+    "ReplicationPolicy",
+    "Region",
+    "GeoTopology",
+    "GeoPlacement",
+    "RegionDownError",
+    "ComplianceError",
+]
+
+
+class ReplicationPolicy(enum.Enum):
+    CROSS_REGION_ACCESS = "cross_region_access"  # paper's current mechanism
+    GEO_REPLICATED = "geo_replicated"            # paper's road-map mechanism
+
+
+class RegionDownError(RuntimeError):
+    pass
+
+
+class ComplianceError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class Region:
+    name: str
+    healthy: bool = True
+    #: geo-fenced regions may not export data (compliance, §4.1.2)
+    geo_fenced: bool = False
+
+
+@dataclasses.dataclass
+class GeoTopology:
+    """Static latency/bandwidth model between regions (ICI vs DCN tiers)."""
+
+    regions: dict[str, Region]
+    local_latency_ms: float = 1.0
+    cross_region_latency_ms: float = 60.0
+
+    def latency(self, src: str, dst: str) -> float:
+        return self.local_latency_ms if src == dst else self.cross_region_latency_ms
+
+
+class GeoPlacement:
+    """Placement + replication + fail-over for one feature store's assets."""
+
+    def __init__(
+        self,
+        topology: GeoTopology,
+        home_region: str,
+        policy: ReplicationPolicy = ReplicationPolicy.CROSS_REGION_ACCESS,
+    ) -> None:
+        if home_region not in topology.regions:
+            raise ValueError(f"unknown region {home_region}")
+        self.topology = topology
+        self.home_region = home_region
+        self.policy = policy
+        self.replicas: set[str] = {home_region}
+        self.read_log: list[tuple[str, str, float]] = []  # (from, served_by, ms)
+
+    # -- replication --------------------------------------------------------
+    def add_replica(self, region: str) -> None:
+        if self.policy is not ReplicationPolicy.GEO_REPLICATED:
+            raise ComplianceError(
+                "replicas require the GEO_REPLICATED policy (§4.1.2)"
+            )
+        home = self.topology.regions[self.home_region]
+        if home.geo_fenced:
+            raise ComplianceError(
+                f"region {self.home_region} is geo-fenced; assets may not be "
+                f"replicated out (data-compliance, §4.1.2)"
+            )
+        if region not in self.topology.regions:
+            raise ValueError(f"unknown region {region}")
+        self.replicas.add(region)
+
+    # -- routing ---------------------------------------------------------------
+    def route_read(self, consumer_region: str) -> tuple[str, float]:
+        """Pick the serving region for a read issued from ``consumer_region``.
+        Returns (region, modeled latency ms).  Raises RegionDownError when no
+        healthy serving region exists."""
+        candidates = [
+            r for r in self.replicas if self.topology.regions[r].healthy
+        ]
+        if not candidates:
+            raise RegionDownError(
+                f"no healthy replica of store homed in {self.home_region}"
+            )
+        if consumer_region in candidates:
+            serving = consumer_region
+        else:
+            serving = min(
+                candidates,
+                key=lambda r: self.topology.latency(consumer_region, r),
+            )
+        ms = self.topology.latency(consumer_region, serving)
+        self.read_log.append((consumer_region, serving, ms))
+        return serving, ms
+
+    # -- failure handling (§3.1.2: cross-region resources for HA) ---------------
+    def mark_down(self, region: str) -> None:
+        self.topology.regions[region].healthy = False
+
+    def mark_up(self, region: str) -> None:
+        self.topology.regions[region].healthy = True
+
+    def failover(self) -> Optional[str]:
+        """If the home region is down, promote the nearest healthy replica to
+        primary.  Returns the new primary (or None if nothing to do)."""
+        if self.topology.regions[self.home_region].healthy:
+            return None
+        healthy = [
+            r
+            for r in self.replicas
+            if r != self.home_region and self.topology.regions[r].healthy
+        ]
+        if not healthy:
+            raise RegionDownError("home region down and no healthy replica")
+        self.home_region = healthy[0]
+        return self.home_region

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for causal GQA attention (the flash kernel's ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(
+    q: jnp.ndarray,      # (B, S, H, D)
+    k: jnp.ndarray,      # (B, T, KV, D)
+    v: jnp.ndarray,      # (B, T, KV, D)
+    *,
+    causal: bool = True,
+) -> jnp.ndarray:
+    b, s, h, d = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.float32(d))
+    if causal:
+        mask = jnp.arange(t)[None, :] <= jnp.arange(s)[:, None]
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v.astype(jnp.float32))
+    return out.reshape(b, s, h, d)

@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: online-store GET over a hash-partitioned key table.
+
+The paper's online store is Redis; its GET is a pointer-chasing hash probe —
+a latency primitive with no TPU analogue (no fine-grained random access from
+vector units).  The TPU-native design applies the paper's own storage-
+partitioning idea (§4.5) to the device: the key space is hash-partitioned
+into P shards; a batch of queries is routed (host/XLA side) to its shard;
+the kernel then resolves each shard's queries against the shard's slots with
+a broadcast compare-match — an O(C/P) streaming scan per query batch at full
+lane width instead of O(1) serial probes.  For managed-store shard sizes
+(C/P slots fitting VMEM) one sweep resolves every query in the shard.
+
+Keys are int64 IDs split into two int32 planes (TPU vector compare is 32-bit
+native); a match requires both planes to agree.
+
+Grid: (partition, slot-block), slot minor/sequential; scratch keeps the best
+(1-based) slot per query, 0 = not found.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["lookup_kernel_call"]
+
+
+def _lookup_kernel(qlo_ref, qhi_ref, klo_ref, khi_ref, out_ref, best_ref):
+    cb = pl.program_id(1)
+    n_cb = pl.num_programs(1)
+
+    @pl.when(cb == 0)
+    def _init():
+        best_ref[...] = jnp.zeros_like(best_ref)
+
+    klo = klo_ref[...]                                    # (1, Cb)
+    khi = khi_ref[...]
+    qlo = qlo_ref[...]                                    # (1, Q)
+    qhi = qhi_ref[...]
+
+    cblk = klo.shape[1]
+    base = cb * cblk
+    slot = base + jax.lax.broadcasted_iota(jnp.int32, (1, cblk), 1)
+
+    # (Q, Cb) compare-match on both 32-bit planes.
+    match = (klo == qlo.T) & (khi == qhi.T)
+    scored = jnp.where(match, slot + 1, 0)                # 1-based, 0 = miss
+    best_ref[...] = jnp.maximum(best_ref[...], scored.max(axis=1)[:, None])
+
+    @pl.when(cb == n_cb - 1)
+    def _write():
+        out_ref[...] = best_ref[...].T - 1                # back to 0-based/-1
+
+
+@functools.partial(jax.jit, static_argnames=("slot_block", "interpret"))
+def lookup_kernel_call(
+    keys_lo: jnp.ndarray,
+    keys_hi: jnp.ndarray,
+    q_lo: jnp.ndarray,
+    q_hi: jnp.ndarray,
+    *,
+    slot_block: int = 1024,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """keys_* (P, C) int32, q_* (P, Q) int32 -> slot idx (P, Q) int32 (-1 miss).
+
+    C % slot_block == 0 and Q lane-padded are ops.py's responsibility.
+    """
+    p, c = keys_lo.shape
+    _, q = q_lo.shape
+    if c % slot_block:
+        raise ValueError("C must be a multiple of slot_block")
+    grid = (p, c // slot_block)
+    return pl.pallas_call(
+        _lookup_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q), lambda pb, cb: (pb, 0)),
+            pl.BlockSpec((1, q), lambda pb, cb: (pb, 0)),
+            pl.BlockSpec((1, slot_block), lambda pb, cb: (pb, cb)),
+            pl.BlockSpec((1, slot_block), lambda pb, cb: (pb, cb)),
+        ],
+        out_specs=pl.BlockSpec((1, q), lambda pb, cb: (pb, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, q), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((q, 1), jnp.int32)],
+        interpret=interpret,
+    )(q_lo, q_hi, keys_lo, keys_hi)

@@ -1,0 +1,129 @@
+"""jit'd wrapper + host routing for the online-lookup kernel.
+
+The online store (core/online_store.py) keeps its device mirror in the
+partitioned layout this kernel expects.  This module provides:
+
+  * ``split_i64`` / ``partition_of`` — the shared hashing/key-splitting
+    helpers (numpy, host-side) so the store and the kernel agree bit-for-bit.
+  * ``lookup`` — the jit'd kernel wrapper over pre-routed (P, Q) queries.
+  * ``route_and_lookup`` — host-side convenience: route a flat id batch to
+    partitions, pad, run the kernel, gather values, un-permute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.online_lookup.kernel import lookup_kernel_call
+
+__all__ = ["split_i64", "partition_of", "lookup", "route_and_lookup"]
+
+_LANE = 128
+_MIX = np.uint64(0x9E3779B97F4A7C15)
+
+
+def split_i64(ids: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """int64 -> (lo, hi) int32 planes (two's-complement faithful)."""
+    u = np.asarray(ids, dtype=np.int64).view(np.uint64)
+    lo = (u & np.uint64(0xFFFFFFFF)).astype(np.uint32).view(np.int32)
+    hi = (u >> np.uint64(32)).astype(np.uint32).view(np.int32)
+    return lo, hi
+
+
+def partition_of(ids: np.ndarray, num_partitions: int) -> np.ndarray:
+    """Fibonacci-hash partition routing (identical for store + queries)."""
+    u = np.asarray(ids, dtype=np.int64).view(np.uint64)
+    mixed = (u * _MIX) >> np.uint64(33)
+    return (mixed % np.uint64(num_partitions)).astype(np.int64)
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("slot_block", "interpret"))
+def lookup(
+    keys_lo: jnp.ndarray,
+    keys_hi: jnp.ndarray,
+    q_lo: jnp.ndarray,
+    q_hi: jnp.ndarray,
+    *,
+    slot_block: int = 1024,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Pre-routed lookup.  keys (P, C), queries (P, Q) -> slots (P, Q)."""
+    p, c = keys_lo.shape
+    c_pad = _round_up(c, min(slot_block, _round_up(c, _LANE)))
+    sb = min(slot_block, c_pad)
+    c_pad = _round_up(c_pad, sb)
+    if c_pad != c:
+        pad = jnp.full((p, c_pad - c), -1, jnp.int32)
+        keys_lo = jnp.concatenate([keys_lo, pad], axis=1)
+        keys_hi = jnp.concatenate([keys_hi, pad], axis=1)
+    q = q_lo.shape[1]
+    q_pad = _round_up(q, _LANE)
+    if q_pad != q:
+        # pad with (-2, -2): matches neither live keys (>=0 planes possible)
+        # nor the empty sentinel (-1, -1).
+        padq = jnp.full((p, q_pad - q), -2, jnp.int32)
+        q_lo = jnp.concatenate([q_lo, padq], axis=1)
+        q_hi = jnp.concatenate([q_hi, padq], axis=1)
+    out = lookup_kernel_call(
+        keys_lo, keys_hi, q_lo, q_hi, slot_block=sb, interpret=interpret
+    )
+    return out[:, :q]
+
+
+def route_and_lookup(
+    keys_lo: np.ndarray,
+    keys_hi: np.ndarray,
+    values: np.ndarray,
+    ids: np.ndarray,
+    *,
+    interpret: bool = True,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Flat query path: ids (B,) int64 against table (P, C) + values (P, C, D).
+
+    Returns (values (B, D) float32 — zeros where missing, found (B,) bool).
+    """
+    num_p, cap = keys_lo.shape
+    ids = np.asarray(ids, dtype=np.int64)
+    b = len(ids)
+    if b == 0:
+        return np.zeros((0, values.shape[-1]), np.float32), np.zeros((0,), bool)
+    part = partition_of(ids, num_p)
+    order = np.argsort(part, kind="stable")
+    counts = np.bincount(part, minlength=num_p)
+    q_max = max(int(counts.max()), 1)
+
+    q_lo = np.full((num_p, q_max), -2, np.int32)
+    q_hi = np.full((num_p, q_max), -2, np.int32)
+    pos = np.zeros(num_p, np.int64)
+    lo_all, hi_all = split_i64(ids)
+    slot_in_part = np.zeros(b, np.int64)
+    for j in order:
+        p = part[j]
+        q_lo[p, pos[p]] = lo_all[j]
+        q_hi[p, pos[p]] = hi_all[j]
+        slot_in_part[j] = pos[p]
+        pos[p] += 1
+
+    slots = np.asarray(
+        lookup(
+            jnp.asarray(keys_lo),
+            jnp.asarray(keys_hi),
+            jnp.asarray(q_lo),
+            jnp.asarray(q_hi),
+            interpret=interpret,
+        )
+    )
+    got = slots[part, slot_in_part]
+    found = got >= 0
+    out = np.zeros((b, values.shape[-1]), np.float32)
+    if found.any():
+        out[found] = values[part[found], got[found]]
+    return out, found

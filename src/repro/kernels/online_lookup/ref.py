@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for partitioned online-store lookup.
+
+Table layout: keys split into int32 (lo, hi) planes, shape (P, C) each —
+P hash partitions of C slots.  Empty slots hold (-1, -1); live IDs are
+non-negative int64 so the sentinel is unambiguous.  Queries arrive already
+routed to their partition: q_lo/q_hi (P, Q).  Result: slot index in [0, C)
+or -1 when absent.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["lookup_ref"]
+
+
+def lookup_ref(
+    keys_lo: jnp.ndarray,
+    keys_hi: jnp.ndarray,
+    q_lo: jnp.ndarray,
+    q_hi: jnp.ndarray,
+) -> jnp.ndarray:
+    # match[p, q, c]
+    match = (keys_lo[:, None, :] == q_lo[:, :, None]) & (
+        keys_hi[:, None, :] == q_hi[:, :, None]
+    )
+    c = keys_lo.shape[1]
+    scored = jnp.where(match, jnp.arange(c)[None, None, :] + 1, 0)
+    return scored.max(axis=2).astype(jnp.int32) - 1

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the point-in-time (as-of) search.
+
+Given a feature table sorted by (entity segment, event_ts) and per-query
+segment bounds [lo, hi), find for each query the greatest row index r in
+[lo, hi) with table_ts[r] <= q_ts.  Returns (idx, valid): idx int32 (garbage
+where invalid), valid bool.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["pit_search_ref"]
+
+
+def pit_search_ref(
+    table_ts: jnp.ndarray,
+    q_ts: jnp.ndarray,
+    q_lo: jnp.ndarray,
+    q_hi: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    m = table_ts.shape[0]
+    r = jnp.arange(m)
+    # ok[q, r]: row r is in query q's segment and not in q's future.
+    ok = (
+        (r[None, :] >= q_lo[:, None])
+        & (r[None, :] < q_hi[:, None])
+        & (table_ts[None, :] <= q_ts[:, None])
+    )
+    count = ok.sum(axis=1)
+    idx = (q_lo + count - 1).astype(jnp.int32)
+    return idx, count > 0

@@ -1,0 +1,160 @@
+"""jit'd public wrapper around the rolling-window aggregation kernel.
+
+Handles everything the raw kernel does not: feature-dim padding to lane
+multiples, row padding to block multiples, span bucketing (the kernel needs a
+static history depth >= the maximum window row-span), and the derived
+aggregations (count is closed-form; mean = sum / count; min/max fall back to
+an XLA segment formulation — the prefix trick does not apply to them, which we
+document rather than hide).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.rolling_agg.kernel import rolling_sum_kernel_call
+from repro.kernels.rolling_agg import ref as ref_mod
+
+__all__ = ["rolling_sum", "rolling_sum_xla", "rolling_agg", "window_starts"]
+
+_LANE = 128
+_DEFAULT_BLOCK = 256
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def window_starts(
+    segment_ids: np.ndarray, timestamps: np.ndarray, window: int
+) -> np.ndarray:
+    """Host-side window-start computation (rows sorted by (segment, ts)).
+
+    Window semantics: row j is in row i's window iff same segment and
+    ``ts_i - window < ts_j <= ts_i``.  Uses a composite monotone key so one
+    global vectorized searchsorted handles every segment at once.
+    """
+    segment_ids = np.asarray(segment_ids, dtype=np.int64)
+    timestamps = np.asarray(timestamps, dtype=np.int64)
+    if len(segment_ids) == 0:
+        return np.zeros((0,), dtype=np.int32)
+    t0 = timestamps.min()
+    rebased = timestamps - t0
+    span = int(rebased.max()) + 2
+    key = segment_ids * span + rebased
+    if not np.all(np.diff(key) >= 0):
+        raise ValueError("rows must be sorted by (segment, timestamp)")
+    q = segment_ids * span + np.maximum(rebased - window, -1)
+    starts = np.searchsorted(key, q, side="right")
+    return starts.astype(np.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "hist", "interpret"))
+def rolling_sum(
+    values: jnp.ndarray,
+    starts: jnp.ndarray,
+    *,
+    block_rows: int = _DEFAULT_BLOCK,
+    hist: int = _DEFAULT_BLOCK,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Rolling-window sum.  values (N, F); starts (N,) int32; spans <= hist.
+
+    Returns float32 (N, F).  Padding: rows to block multiple (pad rows use
+    start=index so their window is empty+self over zero values), features to
+    the 128-lane multiple.
+    """
+    n, feat = values.shape
+    n_pad = _round_up(max(n, 1), block_rows)
+    f_pad = _round_up(max(feat, 1), _LANE)
+    vals_p = jnp.zeros((n_pad, f_pad), values.dtype)
+    vals_p = vals_p.at[:n, :feat].set(values)
+    starts_p = jnp.arange(n_pad, dtype=jnp.int32)
+    starts_p = starts_p.at[:n].set(starts.astype(jnp.int32))
+    out = rolling_sum_kernel_call(
+        vals_p, starts_p, block_rows=block_rows, hist=hist, interpret=interpret
+    )
+    return out[:n, :feat]
+
+
+@jax.jit
+def rolling_sum_xla(values: jnp.ndarray, starts: jnp.ndarray) -> jnp.ndarray:
+    """O(N·F) prefix-difference on the XLA path (no Pallas): the same
+    P[i+1]-P[starts[i]] identity the kernel uses, via cumsum + gather.
+    Long-column catastrophic cancellation is why the Pallas kernel re-zeroes
+    its prefix every block (kernel.py) — this fallback accepts fp32 drift."""
+    v = values.astype(jnp.float32)
+    p_inc = jnp.cumsum(v, axis=0)
+    p_exc = jnp.concatenate([jnp.zeros((1, v.shape[1]), v.dtype), p_inc], axis=0)
+    ends = p_exc[1 + jnp.arange(values.shape[0])]
+    return (ends - p_exc[starts]).astype(jnp.float32)
+
+
+def _pick_hist(max_span: int, block_rows: int) -> int:
+    """Static history depth: next power-of-two multiple of 8 covering the
+    span, so recompilation is bounded to O(log(max span)) variants."""
+    h = 8
+    while h < max_span:
+        h *= 2
+    return max(h, 8)
+
+
+def rolling_agg(
+    values: jnp.ndarray,
+    starts: np.ndarray,
+    agg: str,
+    *,
+    block_rows: int = _DEFAULT_BLOCK,
+    interpret: bool = True,
+    backend: str = "pallas",
+) -> jnp.ndarray:
+    """Public entry used by the DSL executor.  ``starts`` must be host-side
+    (numpy) — the DSL computes it from store-resident timestamps — which lets
+    us pick the static history bucket and validate spans eagerly.
+
+    backend: 'pallas' (TPU target; interpret=True on CPU) or 'xla' (the
+    cumsum fallback — what a mesh without the kernel would run)."""
+    starts = np.asarray(starts)
+    n = values.shape[0]
+    if n == 0:
+        return jnp.zeros((0, values.shape[1]), jnp.float32)
+    spans = np.arange(n) + 1 - starts
+    if (spans <= 0).any():
+        raise ValueError("window starts must satisfy starts[i] <= i")
+    max_span = int(spans.max())
+
+    if agg == "count":
+        cnt = jnp.asarray(spans, dtype=jnp.float32)
+        return jnp.broadcast_to(cnt[:, None], values.shape).astype(jnp.float32)
+
+    if agg in ("sum", "mean"):
+        hist = _pick_hist(max_span, block_rows)
+        if backend == "xla":
+            s = rolling_sum_xla(values, jnp.asarray(starts, jnp.int32))
+        elif hist > 4096:
+            # Span too deep for a VMEM history buffer: stay on the XLA
+            # path rather than claim an unrealistic VMEM footprint.
+            s = rolling_sum_xla(values, jnp.asarray(starts, jnp.int32))
+        else:
+            s = rolling_sum(
+                values,
+                jnp.asarray(starts, dtype=jnp.int32),
+                block_rows=block_rows,
+                hist=hist,
+                interpret=interpret,
+            )
+        if agg == "sum":
+            return s
+        cnt = jnp.asarray(spans, dtype=jnp.float32)[:, None]
+        return s / jnp.maximum(cnt, 1.0)
+
+    if agg in ("min", "max"):
+        # Prefix-difference does not apply to min/max; use the jnp oracle
+        # formulation (XLA lowers this as masked reductions).
+        return ref_mod.rolling_agg_ref(values, jnp.asarray(starts), agg)
+
+    raise ValueError(f"unknown agg {agg!r}")

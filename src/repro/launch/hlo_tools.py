@@ -1,0 +1,94 @@
+"""HLO inspection helpers for the §Perf loop (dry-run profiling on CPU).
+
+``top_tensors`` ranks the largest tensor shapes appearing in a compiled
+module — the closest thing to a buffer-assignment profile the public API
+exposes, and in practice it finds the memory hogs (score matrices,
+dispatch buffers, fp32 optimizer temporaries) immediately.
+
+``collective_sites`` groups collective ops by (kind, shape) so a single
+pathological all-gather inserted per layer shows up as count=num_layers.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import Counter, defaultdict
+
+from repro.launch.roofline import _DTYPE_BYTES, _SHAPE_RE
+
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%[\w\.\-]+\s*=\s*(\S+)\s+([\w\-]+)")
+
+
+def _bytes_of(dt: str, dims: str) -> int:
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def top_tensors(hlo_text: str, k: int = 15) -> list[tuple[str, int, int]]:
+    """[(shape_str, bytes, count)] for the k largest distinct result shapes."""
+    seen: Counter = Counter()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        shp = m.group(1)
+        sm = _SHAPE_RE.search(shp)
+        if not sm:
+            continue
+        seen[sm.group(0)] += 1
+    ranked = sorted(
+        ((s, _bytes_of(*_SHAPE_RE.match(s).groups()), c) for s, c in seen.items()),
+        key=lambda t: -t[1],
+    )
+    return ranked[:k]
+
+
+def collective_sites(hlo_text: str, k: int = 15) -> list[dict]:
+    """Collectives grouped by (op kind, operand shape): count + total bytes."""
+    from repro.launch.roofline import _COLLECTIVES, _INSTR_RE
+
+    shapes: dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if m:
+            shapes[m.group(1)] = m.group(2)
+
+    groups: dict[tuple, dict] = defaultdict(lambda: {"count": 0, "bytes": 0})
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        op = m.group(3)
+        kind = next((c for c in _COLLECTIVES if op.startswith(c)), None)
+        if kind is None:
+            continue
+        call = line[line.find(op):]
+        lp = call.find("(")
+        operand_bytes = 0
+        shape_key = "?"
+        if lp >= 0:
+            refs = re.findall(r"%[\w\.\-]+", call[lp:])
+            for ref in refs:
+                s = shapes.get(ref, "")
+                b = sum(
+                    _bytes_of(*mm.groups()) for mm in _SHAPE_RE.finditer(s)
+                )
+                if b:
+                    operand_bytes += b
+                    shape_key = s[:60]
+        g = groups[(kind, shape_key)]
+        g["count"] += 1
+        g["bytes"] += operand_bytes
+        nm = re.search(r'op_name="([^"]+)"', line)
+        if nm:
+            g.setdefault("op_names", set()).add(nm.group(1)[-80:])
+    out = [
+        {"kind": k_[0], "shape": k_[1], **v, "op_names": sorted(v.get("op_names", []))[:4]}
+        for k_, v in groups.items()
+    ]
+    return sorted(out, key=lambda d: -d["bytes"])[:k]

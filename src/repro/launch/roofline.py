@@ -1,0 +1,210 @@
+"""Roofline analysis from the compiled dry-run artifact.
+
+Terms per (arch x shape x mesh), in seconds, derived from the post-SPMD
+per-device module (cost_analysis is per-device after partitioning; we
+verified a D·F matmul reports global_flops/512 on the 512-device mesh):
+
+  compute    = flops_per_device / PEAK_FLOPS
+  memory     = bytes_per_device / HBM_BW
+  collective = collective_bytes_per_device / LINK_BW
+
+collective_bytes is NOT in cost_analysis: we parse the compiled HLO text,
+build a symbol table of instruction result shapes, and sum the OPERAND
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction.  Shapes in the post-SPMD module are shard
+(per-device) shapes, so the sum is per-device traffic — equivalent to the
+spec's global_bytes / chips for uniform SPMD programs.
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Optional
+
+__all__ = [
+    "HW", "collective_bytes", "roofline_from_compiled", "roofline_from_terms",
+    "RooflineReport",
+]
+
+HW = {
+    "peak_flops": 197e12,   # bf16 per chip
+    "hbm_bw": 819e9,        # bytes/s per chip
+    "link_bw": 50e9,        # bytes/s per ICI link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)"
+)
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[128,512]{1,0}' or tuple '(bf16[..], f32[..])' -> bytes."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-collective-kind operand bytes (per device)."""
+    # symbol table: %name -> result shape string
+    shapes: dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if m:
+            shapes[m.group(1)] = m.group(2)
+
+    out: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        op = m.group(3)
+        kind = next(
+            (c for c in _COLLECTIVES if op == c or op.startswith(c + ".")
+             or op == c + "-start" or op.startswith(c + "-start")),
+            None,
+        )
+        if kind is None:
+            continue
+        # operand list: between the first '(' after the op name and its ')'
+        call = line[line.find(op):]
+        lp = call.find("(")
+        if lp < 0:
+            continue
+        depth, rp = 0, -1
+        for i, ch in enumerate(call[lp:], start=lp):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    rp = i
+                    break
+        operands = call[lp + 1 : rp]
+        # operands may carry inline types or be bare %refs
+        n = 0
+        for ref in re.finditer(r"%[\w\.\-]+", operands):
+            n += _shape_bytes(shapes.get(ref.group(0), ""))
+        if n == 0:
+            n = _shape_bytes(operands)
+        # The CPU backend PROMOTES bf16 all-reduces to f32 (no bf16 ALU) and
+        # marks the reduce computation "<op>.clone_promoted"; TPU reduces
+        # bf16 natively, so count promoted reductions at the source dtype.
+        if kind == "all-reduce" and "_promoted" in line:
+            n //= 2
+        out[kind] += n
+    return dict(out)
+
+
+def dus_overcount(hlo_text: str) -> int:
+    """Bytes cost_analysis over-attributes to dynamic-update-slice ops.
+
+    A DUS (KV-cache insert, scan-carry write) is counted operand+output =
+    2·buffer + update, but XLA aliases it in place: real traffic ≈ 2·update.
+    Overcount per site = 2·buffer − update.  TPU behaves the same way, so
+    the memory term subtracts this (raw value kept in the report)."""
+    shapes: dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if m:
+            shapes[m.group(1)] = m.group(2)
+    total = 0
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m or not m.group(3).startswith("dynamic-update-slice"):
+            continue
+        buf = _shape_bytes(m.group(2))
+        # operands after the '=': (buffer, update, indices...)
+        refs = re.findall(r"%[\w\.\-]+", line.split("=", 1)[1])
+        upd = _shape_bytes(shapes.get(refs[1], "")) if len(refs) > 1 else 0
+        total += max(0, 2 * buf - upd)
+    return total
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    flops_per_dev: float
+    bytes_per_dev: float
+    coll_bytes_per_dev: float
+    coll_breakdown: dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: Optional[float] = None
+    useful_ratio: Optional[float] = None
+    bytes_raw_per_dev: Optional[float] = None   # before the DUS adjustment
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def roofline_from_terms(
+    flops: float, byts: float, colls: dict[str, int], *,
+    model_flops_global: Optional[float] = None,
+    num_devices: Optional[int] = None,
+) -> RooflineReport:
+    cb = float(sum(colls.values()))
+    compute_s = flops / HW["peak_flops"]
+    memory_s = byts / HW["hbm_bw"]
+    collective_s = cb / HW["link_bw"]
+    dominant = max(
+        [("compute", compute_s), ("memory", memory_s), ("collective", collective_s)],
+        key=lambda kv: kv[1],
+    )[0]
+
+    model_flops = useful = None
+    if model_flops_global is not None and num_devices:
+        model_flops = model_flops_global / num_devices
+        useful = model_flops / flops if flops else None
+
+    return RooflineReport(
+        flops, byts, cb, {k: int(v) for k, v in colls.items()},
+        compute_s, memory_s, collective_s, dominant, model_flops, useful,
+    )
+
+
+def roofline_from_compiled(
+    compiled, *, model_flops_global: Optional[float] = None,
+    num_devices: Optional[int] = None,
+) -> RooflineReport:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    txt = compiled.as_text()
+    raw = float(ca.get("bytes accessed", 0.0))
+    adj = max(0.0, raw - dus_overcount(txt))
+    rep = roofline_from_terms(
+        float(ca.get("flops", 0.0)),
+        adj,
+        collective_bytes(txt),
+        model_flops_global=model_flops_global,
+        num_devices=num_devices,
+    )
+    rep.bytes_raw_per_dev = raw
+    return rep

@@ -1,0 +1,153 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, zero device allocation: params/optimizer state
+come from jax.eval_shape over the real initializers; batches and caches are
+constructed to the assigned shape cells.  The dry-run lowers against exactly
+these (the pattern that proves a 671B train step fits without ever
+allocating it).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES, ShapeSpec
+from repro.models import api
+from repro.models.config import ModelConfig
+from repro.optim.adamw import adamw
+from repro.launch.steps import TrainState, make_prefill_step, make_serve_step, make_train_step
+
+__all__ = [
+    "input_specs", "abstract_state", "abstract_params", "step_fn_for",
+    "microbatches_for",
+]
+
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )
+
+
+def abstract_params(cfg: ModelConfig, *, max_decode_len: int = 4096):
+    return _sds(
+        jax.eval_shape(
+            lambda k: api.init_params(k, cfg, max_decode_len=max_decode_len),
+            jax.random.PRNGKey(0),
+        )
+    )
+
+
+def abstract_state(cfg: ModelConfig, optimizer=None):
+    opt = optimizer or default_optimizer(cfg)
+    params = abstract_params(cfg)
+    return _sds(jax.eval_shape(lambda p: TrainState.create(p, opt), params))
+
+
+def default_optimizer(cfg: ModelConfig):
+    # 8-bit moments: the HBM-fit configuration for the large cells.
+    return adamw(lr=3e-4, weight_decay=0.1, quantize_moments=True)
+
+
+def batch_struct(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    out: dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    }
+    if cfg.encoder_decoder:
+        out["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.compute_dtype)
+        )
+    if cfg.vision_prefix:
+        out["patch_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.num_patches, cfg.vision_dim), jnp.dtype(cfg.compute_dtype)
+        )
+    return out
+
+
+def input_specs(
+    arch: str, shape: str, *, reduced: bool = False, cfg_override=None
+) -> dict:
+    """Returns {'kind', 'cfg', 'args': tuple of abstract inputs} for the
+    (arch x shape) cell.  ``args`` matches the step function's signature:
+      train:   (TrainState, batch)
+      prefill: (params, batch)
+      decode:  (params, cache, tokens_new)
+
+    ``cfg_override`` substitutes a depth-scaled config (the dry-run's
+    two-point cost extrapolation) while keeping the cell's batch geometry.
+    """
+    cfg = cfg_override if cfg_override is not None else get_config(arch, reduced=reduced)
+    spec: ShapeSpec = SHAPES[shape]
+    b, s = spec.global_batch, spec.seq_len
+    if reduced:
+        b, s = max(2, b // 64), min(s, 64)
+
+    if spec.kind == "train":
+        state = abstract_state(cfg)
+        return {
+            "kind": "train",
+            "cfg": cfg,
+            "args": (state, batch_struct(cfg, b, s)),
+        }
+    if spec.kind == "prefill":
+        return {
+            "kind": "prefill",
+            "cfg": cfg,
+            # enc-dec archs size their learned decoder position table from
+            # max_decode_len; it must cover the prefill sequence
+            "args": (
+                abstract_params(cfg, max_decode_len=max(4096, s)),
+                batch_struct(cfg, b, s),
+            ),
+        }
+    # decode: one new token against a seq_len-deep cache
+    params = abstract_params(cfg, max_decode_len=s)
+    cache = _sds(jax.eval_shape(lambda: api.init_cache(cfg, b, s)))
+    tokens_new = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    return {
+        "kind": "decode",
+        "cfg": cfg,
+        "args": (params, cache, tokens_new),
+    }
+
+
+#: per-device budget for saved (remat) activations, bytes.  v5e has 16 GB
+#: HBM; model+optimizer state claims most of it on the big cells, so the
+#: residual-carry budget is deliberately small.
+ACT_BUDGET_BYTES = 2 * 2**30
+
+
+def microbatches_for(kind: str, cfg: ModelConfig, batch: int, seq: int, mesh) -> int:
+    """Gradient-accumulation factor: smallest divisor of the global batch
+    whose per-microbatch saved-residual footprint
+    (tokens_per_dev · d_model · 2 B · num_layers, + MoE routed copies)
+    fits ACT_BUDGET_BYTES."""
+    if kind != "train":
+        return 1
+    import numpy as np
+
+    dp = int(np.prod([mesh.shape[a] for a in mesh.axis_names if a != "model"]))
+    tokens_per_dev = batch * seq / dp
+    per_layer = tokens_per_dev * cfg.d_model * 2
+    if cfg.moe:  # dispatched activations survive the checkpoint boundary
+        per_layer *= 1.0 + 0.35
+    act = per_layer * cfg.num_layers
+    for mu in sorted({d for d in range(1, batch + 1) if batch % d == 0}):
+        if act / mu <= ACT_BUDGET_BYTES:
+            return mu
+    return batch
+
+
+def step_fn_for(kind: str, cfg: ModelConfig, *, num_microbatches: int = 1):
+    if kind == "train":
+        return make_train_step(
+            cfg, default_optimizer(cfg), num_microbatches=num_microbatches
+        )
+    if kind == "prefill":
+        return make_prefill_step(cfg)
+    return make_serve_step(cfg)

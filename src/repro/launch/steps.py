@@ -1,0 +1,103 @@
+"""Step functions: the units the dry-run lowers and the drivers execute.
+
+  * train_step — fwd + bwd + optimizer update (donated state)
+  * serve_step — one decode token against a KV/state cache (donated cache)
+  * prefill_step — full-sequence logits (the prefill-throughput unit)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+from repro.models.config import ModelConfig
+from repro.optim.adamw import Optimizer
+
+__all__ = ["TrainState", "make_train_step", "make_serve_step", "make_prefill_step"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    step: jnp.ndarray
+
+    @staticmethod
+    def create(params, optimizer: Optimizer) -> "TrainState":
+        return TrainState(params, optimizer.init(params), jnp.zeros((), jnp.int32))
+
+
+def make_train_step(
+    cfg: ModelConfig, optimizer: Optimizer, *, num_microbatches: int = 1
+) -> Callable:
+    """fwd+bwd+update.  num_microbatches > 1 runs gradient accumulation over
+    batch slices (a lax.scan): per-microbatch activation memory is 1/µ of the
+    full batch while the math (sum of per-slice mean grads / µ) is identical.
+    This is THE memory lever for the big train cells — the per-layer saved
+    residual stream is O(tokens·d_model) and dominates peak HBM at B=256·4k.
+    """
+
+    def grads_of(params, batch):
+        def loss_fn(p):
+            return api.train_loss(p, batch, cfg)
+
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def train_step(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        if num_microbatches == 1:
+            (_, metrics), grads = grads_of(state.params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape(
+                    (num_microbatches, x.shape[0] // num_microbatches)
+                    + x.shape[1:]
+                ),
+                batch,
+            )
+
+            def micro(acc, b_i):
+                (_, metrics), g = grads_of(state.params, b_i)
+                acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32), acc, g
+                )
+                return acc, metrics
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            from repro.models.pspec import scan_unroll
+
+            acc, metrics_all = jax.lax.scan(
+                micro, zeros, mb, unroll=scan_unroll(num_microbatches)
+            )
+            grads = jax.tree.map(lambda a: a / num_microbatches, acc)
+            metrics = jax.tree.map(lambda m: m[-1], metrics_all)
+
+        new_params, new_opt = optimizer.update(grads, state.opt, state.params)
+        new_state = TrainState(new_params, new_opt, state.step + 1)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    def serve_step(params, cache, tokens_new):
+        logits, cache = api.decode_step(params, cache, tokens_new, cfg)
+        next_tok = jnp.argmax(logits[..., -1, :] if logits.ndim == 3 else logits,
+                              axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    def prefill_step(params, batch):
+        return api.forward_logits(params, batch, cfg)
+
+    return prefill_step

@@ -1,0 +1,86 @@
+"""Uniform model API over the two assemblies (decoder-only LM / enc-dec).
+
+Everything downstream (launchers, dry-run, benchmarks, tests) talks to
+these five functions; the family dispatch lives here and nowhere else.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, lm
+from repro.models.config import ModelConfig
+
+__all__ = [
+    "init_params",
+    "train_loss",
+    "forward_logits",
+    "init_cache",
+    "decode_step",
+    "make_dummy_batch",
+]
+
+
+def init_params(key, cfg: ModelConfig, *, max_decode_len: int = 4096) -> dict:
+    if cfg.encoder_decoder:
+        return encdec.init_params(key, cfg, max_pos=max_decode_len)
+    return lm.init_params(key, cfg)
+
+
+def train_loss(params: dict, batch: dict, cfg: ModelConfig):
+    if cfg.encoder_decoder:
+        return encdec.train_loss(params, batch, cfg)
+    return lm.train_loss(params, batch, cfg)
+
+
+def forward_logits(params: dict, batch: dict, cfg: ModelConfig) -> jnp.ndarray:
+    """Full-sequence logits (the prefill-throughput path)."""
+    if cfg.encoder_decoder:
+        memory = encdec.encode(params, batch["frames"], cfg)
+        return encdec._decode_full(params, memory, batch["tokens"], cfg)
+    _, logits, _ = lm.forward(params, batch, cfg)
+    return logits
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    if cfg.encoder_decoder:
+        return encdec.init_cache(cfg, batch, max_len)
+    return lm.init_cache(cfg, batch, max_len)
+
+
+def decode_step(params: dict, cache: dict, tokens_new: jnp.ndarray,
+                cfg: ModelConfig):
+    if cfg.encoder_decoder:
+        return encdec.decode_step(params, cache, tokens_new, cfg)
+    return lm.decode_step(params, cache, tokens_new, cfg)
+
+
+def encode_memory(params: dict, frames: jnp.ndarray, cfg: ModelConfig):
+    """Enc-dec only: run the encoder over (stub) frame embeddings."""
+    return encdec.encode(params, frames, cfg)
+
+
+def attach_memory(cache: dict, memory: jnp.ndarray, params: dict,
+                  cfg: ModelConfig) -> dict:
+    """Enc-dec only: precompute cross-attention K/V into the decode cache."""
+    return encdec.precompute_cross(params, memory, cfg, cache)
+
+
+def make_dummy_batch(cfg: ModelConfig, batch: int, seq: int, *, seed: int = 0) -> dict:
+    """Concrete (allocated) batch for smoke tests and examples."""
+    k = jax.random.PRNGKey(seed)
+    out: dict[str, Any] = {
+        "tokens": jax.random.randint(k, (batch, seq), 0, cfg.vocab_size, jnp.int32)
+    }
+    if cfg.encoder_decoder:
+        out["frames"] = jax.random.normal(
+            k, (batch, cfg.encoder_seq, cfg.d_model), jnp.float32
+        ).astype(jnp.dtype(cfg.compute_dtype))
+    if cfg.vision_prefix:
+        out["patch_embeds"] = jax.random.normal(
+            k, (batch, cfg.num_patches, cfg.vision_dim), jnp.float32
+        ).astype(jnp.dtype(cfg.compute_dtype))
+    return out

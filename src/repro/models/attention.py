@@ -1,0 +1,229 @@
+"""GQA/MQA attention with causal + sliding-window masks and KV-cache decode.
+
+Covers: phi3 (GQA), gemma-2b (MQA, head_dim 256), qwen1.5 (MHA + QKV bias),
+gemma3 (5:1 local:global sliding window, ring-buffer local caches), pixtral
+backbone (GQA, attn_out_dim != d_model), zamba2's shared attention block, and
+the whisper encoder/decoder (bidirectional / cross attention).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, dense_init, reduce_boundary, rope
+
+__all__ = [
+    "attn_init",
+    "attention",
+    "attention_decode",
+    "init_kv_cache",
+    "cross_attention",
+]
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd), dtype=dtype),
+        "wk": dense_init(ks[1], (d, kv * hd), dtype=dtype),
+        "wv": dense_init(ks[2], (d, kv * hd), dtype=dtype),
+        "wo": dense_init(ks[3], (h * hd, d), fan_in=h * hd, dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    return p
+
+
+def _project_qkv(params, x, cfg: ModelConfig):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    return (
+        q.reshape(b, s, h, hd),
+        k.reshape(b, s, kv, hd),
+        v.reshape(b, s, kv, hd),
+    )
+
+
+def _softcap(scores: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap > 0:
+        return cap * jnp.tanh(scores / cap)
+    return scores
+
+
+def _sdpa(q, k, v, mask, cfg: ModelConfig):
+    """q (B,S,H,hd), k/v (B,T,KV,hd), mask (B|1, S, T) bool -> (B,S,H*hd).
+    fp32 scores; GQA via head grouping."""
+    b, s, h, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, hd)
+    scores = jnp.einsum(
+        "bskgd,btkd->bkgst", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) / jnp.sqrt(float(hd))
+    scores = _softcap(scores, cfg.attn_logit_softcap)
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v.astype(jnp.float32))
+    return out.reshape(b, s, h * hd).astype(q.dtype)
+
+
+def make_mask(
+    q_pos: jnp.ndarray,
+    k_pos: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    is_global=True,
+    k_valid: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """(B|1, S, T) boolean mask.  ``is_global`` may be a traced scalar —
+    local/global layer selection stays branch-free inside layer scans."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    m = kp <= qp if causal else jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if window:
+        local = (qp - kp) < window
+        glob = jnp.asarray(is_global, bool)
+        m = m & (local | glob)
+    if k_valid is not None:
+        m = m & k_valid[..., None, :]
+    if m.ndim == 2:
+        m = m[None]
+    return m
+
+
+def attention(
+    params: dict,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    is_global=True,
+    causal: bool = True,
+) -> jnp.ndarray:
+    """Full-sequence attention (train / prefill).  positions (B, S) or (S,)."""
+    q, k, v = _project_qkv(params, x, cfg)
+    cos, sin = rope(positions, cfg.head_dim, cfg.rope_theta)
+    if positions.ndim == 1:
+        cos, sin = cos[None], sin[None]
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    # flash path: plain causal attention only (windowed/softcap/cross fall
+    # back to the einsum path — see kernels/flash_attn)
+    if (
+        cfg.attn_impl == "pallas_flash"
+        and causal
+        and not cfg.sliding_window
+        and not cfg.attn_logit_softcap
+        and positions.ndim == 1
+    ):
+        from repro.kernels.flash_attn.ops import flash_attention
+
+        b, s = q.shape[:2]
+        out = flash_attention(q, k, v, causal=True)
+        out = out.reshape(b, s, cfg.num_heads * cfg.head_dim)
+        return reduce_boundary(out, x.dtype) @ params["wo"]
+
+    pos2 = positions if positions.ndim == 2 else positions[None]
+    mask = make_mask(
+        pos2, pos2, causal=causal, window=cfg.sliding_window, is_global=is_global
+    )
+    return reduce_boundary(_sdpa(q, k, v, mask, cfg), x.dtype) @ params["wo"]
+
+
+# -- decode with KV cache -----------------------------------------------------
+def init_kv_cache(
+    cfg: ModelConfig, batch: int, max_len: int, *, window_cache: bool = False,
+    dtype=jnp.bfloat16,
+) -> dict:
+    """Per-layer cache pytree (stacked over layers by the caller).
+
+    window_cache=True allocates a ring buffer of the sliding window size —
+    the sub-quadratic memory plan for local layers at 500k context."""
+    size = min(max_len, cfg.sliding_window) if window_cache and cfg.sliding_window else max_len
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, size, kv, hd), dtype),
+        "v": jnp.zeros((batch, size, kv, hd), dtype),
+        "pos": jnp.full((batch, size), -1, jnp.int32),  # -1 = empty slot
+    }
+
+
+def attention_decode(
+    params: dict,
+    x: jnp.ndarray,
+    cache: dict,
+    t: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    is_global=True,
+) -> tuple[jnp.ndarray, dict]:
+    """One-token decode.  x (B, 1, D); t scalar int32 (current position).
+    Returns (out (B, 1, D), updated cache)."""
+    b = x.shape[0]
+    q, k_new, v_new = _project_qkv(params, x, cfg)
+    pos_new = jnp.full((b, 1), t, jnp.int32)
+    cos, sin = rope(pos_new, cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k_new = apply_rope(k_new, cos, sin)
+
+    size = cache["k"].shape[1]
+    slot = jnp.mod(t, size)  # ring semantics; == t when size == max_len
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+    pos = jax.lax.dynamic_update_slice(cache["pos"], pos_new, (0, slot))
+
+    mask = make_mask(
+        pos_new,
+        pos,
+        causal=True,
+        window=cfg.sliding_window,
+        is_global=is_global,
+        k_valid=pos >= 0,
+    )
+    out = reduce_boundary(_sdpa(q, k, v, mask, cfg), x.dtype) @ params["wo"]
+    return out, {"k": k, "v": v, "pos": pos}
+
+
+# -- cross attention (whisper decoder) ------------------------------------------
+def cross_attn_init(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, h * hd), dtype=dtype),
+        "wk": dense_init(ks[1], (d, h * hd), dtype=dtype),
+        "wv": dense_init(ks[2], (d, h * hd), dtype=dtype),
+        "wo": dense_init(ks[3], (h * hd, d), fan_in=h * hd, dtype=dtype),
+    }
+
+
+def cross_attention(
+    params: dict, x: jnp.ndarray, memory: jnp.ndarray, cfg: ModelConfig
+) -> jnp.ndarray:
+    """x (B,S,D) attends to encoder memory (B,T,D); no positions (whisper
+    applies learned/sinusoidal pos upstream)."""
+    b, s, _ = x.shape
+    t = memory.shape[1]
+    h, hd = cfg.num_heads, cfg.head_dim
+    q = (x @ params["wq"]).reshape(b, s, h, hd)
+    k = (memory @ params["wk"]).reshape(b, t, h, hd)
+    v = (memory @ params["wv"]).reshape(b, t, h, hd)
+    mask = jnp.ones((1, s, t), bool)
+    return reduce_boundary(_sdpa(q, k, v, mask, cfg), x.dtype) @ params["wo"]

@@ -1,0 +1,218 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+Per the assignment, the conv/mel frontend is a STUB: ``input_specs()``
+supplies precomputed frame embeddings (B, T_enc, D).  The backbone is
+faithful: pre-LayerNorm transformer encoder (bidirectional), decoder with
+causal self-attention + cross-attention, learned decoder positions,
+sinusoidal encoder positions, GELU MLPs, tied embedding/output head.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import _project_qkv, _sdpa, cross_attn_init, make_mask
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, layer_norm, mlp_apply, mlp_init
+from repro.models.losses import next_token_loss
+from repro.models.pspec import BATCH, constrain, scan_unroll
+
+__all__ = ["init_params", "train_loss", "init_cache", "decode_step", "encode"]
+
+
+def _ln_init(d: int, dtype) -> dict:
+    return {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def _attn_nope_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, h * hd), dtype=dtype),
+        "wk": dense_init(ks[1], (d, h * hd), dtype=dtype),
+        "wv": dense_init(ks[2], (d, h * hd), dtype=dtype),
+        "wo": dense_init(ks[3], (h * hd, d), fan_in=h * hd, dtype=dtype),
+    }
+
+
+def _attn_nope(params, x, cfg: ModelConfig, *, causal: bool) -> jnp.ndarray:
+    b, s, _ = x.shape
+    h, hd = cfg.num_heads, cfg.head_dim
+    q = (x @ params["wq"]).reshape(b, s, h, hd)
+    k = (x @ params["wk"]).reshape(b, s, h, hd)
+    v = (x @ params["wv"]).reshape(b, s, h, hd)
+    pos = jnp.arange(s)[None]
+    mask = make_mask(pos, pos, causal=causal)
+    return _sdpa(q, k, v, mask, cfg) @ params["wo"]
+
+
+def _cross(params, x, mem_k, mem_v, cfg: ModelConfig) -> jnp.ndarray:
+    b, s, _ = x.shape
+    h, hd = cfg.num_heads, cfg.head_dim
+    q = (x @ params["wq"]).reshape(b, s, h, hd)
+    mask = jnp.ones((1, s, mem_k.shape[1]), bool)
+    return _sdpa(q, mem_k, mem_v, mask, cfg) @ params["wo"]
+
+
+def _sinusoid(length: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-math.log(10_000.0) * dim / max(d // 2 - 1, 1))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def init_params(key, cfg: ModelConfig, *, max_pos: int) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    ks = list(jax.random.split(key, cfg.encoder_layers + cfg.num_layers + 4))
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "ln1": _ln_init(d, dtype),
+            "attn": _attn_nope_init(k1, cfg, dtype),
+            "ln2": _ln_init(d, dtype),
+            "mlp": mlp_init(k2, d, cfg.d_ff, "gelu", dtype),
+        }
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "ln1": _ln_init(d, dtype),
+            "self_attn": _attn_nope_init(k1, cfg, dtype),
+            "ln2": _ln_init(d, dtype),
+            "cross_attn": _attn_nope_init(k2, cfg, dtype),
+            "ln3": _ln_init(d, dtype),
+            "mlp": mlp_init(k3, d, cfg.d_ff, "gelu", dtype),
+        }
+
+    stack = lambda trees: jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+    return {
+        "embed": dense_init(ks.pop(), (cfg.vocab_size, d), fan_in=d, dtype=dtype),
+        "pos_dec": dense_init(ks.pop(), (max_pos, d), fan_in=d, dtype=dtype),
+        "enc": stack([enc_layer(ks.pop()) for _ in range(cfg.encoder_layers)]),
+        "enc_ln": _ln_init(d, dtype),
+        "dec": stack([dec_layer(ks.pop()) for _ in range(cfg.num_layers)]),
+        "dec_ln": _ln_init(d, dtype),
+    }
+
+
+def encode(params: dict, frames: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """frames (B, T_enc, D) from the stub frontend -> encoder memory."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = frames.astype(cdt) + _sinusoid(frames.shape[1], cfg.d_model).astype(cdt)
+
+    def body(x, lp):
+        x = constrain(x, BATCH, None, None)
+        h = layer_norm(x, lp["ln1"]["g"], lp["ln1"]["b"])
+        x = x + _attn_nope(lp["attn"], h, cfg, causal=False)
+        h = layer_norm(x, lp["ln2"]["g"], lp["ln2"]["b"])
+        x = x + mlp_apply(lp["mlp"], h, "gelu")
+        return x, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["enc"],
+                        unroll=scan_unroll(cfg.encoder_layers))
+    return layer_norm(x, params["enc_ln"]["g"], params["enc_ln"]["b"])
+
+
+def _decode_full(params, memory, tokens, cfg: ModelConfig) -> jnp.ndarray:
+    cdt = jnp.dtype(cfg.compute_dtype)
+    s = tokens.shape[1]
+    x = params["embed"][tokens].astype(cdt) + params["pos_dec"][:s].astype(cdt)
+
+    def body(x, lp):
+        x = constrain(x, BATCH, None, None)
+        h = layer_norm(x, lp["ln1"]["g"], lp["ln1"]["b"])
+        x = x + _attn_nope(lp["self_attn"], h, cfg, causal=True)
+        h = layer_norm(x, lp["ln2"]["g"], lp["ln2"]["b"])
+        b, t = memory.shape[:2]
+        hh, hd = cfg.num_heads, cfg.head_dim
+        mem_k = (memory @ lp["cross_attn"]["wk"]).reshape(b, t, hh, hd)
+        mem_v = (memory @ lp["cross_attn"]["wv"]).reshape(b, t, hh, hd)
+        x = x + _cross(lp["cross_attn"], h, mem_k, mem_v, cfg)
+        h = layer_norm(x, lp["ln3"]["g"], lp["ln3"]["b"])
+        x = x + mlp_apply(lp["mlp"], h, "gelu")
+        return x, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["dec"],
+                        unroll=scan_unroll(cfg.num_layers))
+    x = layer_norm(x, params["dec_ln"]["g"], params["dec_ln"]["b"])
+    return constrain(x @ params["embed"].T, BATCH, None, "model")
+
+
+def train_loss(params: dict, batch: dict, cfg: ModelConfig):
+    memory = encode(params, batch["frames"], cfg)
+    logits = _decode_full(params, memory, batch["tokens"], cfg)
+    loss = next_token_loss(logits, batch["tokens"])
+    return loss, {"lm_loss": loss, "total_loss": loss}
+
+
+# -- serving -------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    dtype = jnp.dtype(cfg.compute_dtype)
+    h, hd, L = cfg.num_heads, cfg.head_dim, cfg.num_layers
+    t_enc = cfg.encoder_seq
+    return {
+        "t": jnp.zeros((), jnp.int32),
+        "self_k": jnp.zeros((L, batch, max_len, h, hd), dtype),
+        "self_v": jnp.zeros((L, batch, max_len, h, hd), dtype),
+        "mem_k": jnp.zeros((L, batch, t_enc, h, hd), dtype),
+        "mem_v": jnp.zeros((L, batch, t_enc, h, hd), dtype),
+    }
+
+
+def precompute_cross(params: dict, memory: jnp.ndarray, cfg: ModelConfig, cache: dict) -> dict:
+    b, t = memory.shape[:2]
+    h, hd = cfg.num_heads, cfg.head_dim
+
+    def per_layer(lp):
+        mk = (memory @ lp["cross_attn"]["wk"]).reshape(b, t, h, hd)
+        mv = (memory @ lp["cross_attn"]["wv"]).reshape(b, t, h, hd)
+        return mk, mv
+
+    mks, mvs = jax.lax.map(per_layer, params["dec"])
+    return {**cache, "mem_k": mks, "mem_v": mvs}
+
+
+def decode_step(params: dict, cache: dict, tokens_new: jnp.ndarray,
+                cfg: ModelConfig) -> tuple[jnp.ndarray, dict]:
+    cdt = jnp.dtype(cfg.compute_dtype)
+    t = cache["t"]
+    b = tokens_new.shape[0]
+    h, hd = cfg.num_heads, cfg.head_dim
+    x = params["embed"][tokens_new].astype(cdt) + jax.lax.dynamic_slice(
+        params["pos_dec"], (t, 0), (1, cfg.d_model)
+    ).astype(cdt)[None]
+
+    max_len = cache["self_k"].shape[2]
+    kpos = jnp.arange(max_len)[None]
+    mask = (kpos <= t)[:, None, :]
+
+    def body(x, inp):
+        lp, sk, sv, mk, mv = inp
+        hdn = layer_norm(x, lp["ln1"]["g"], lp["ln1"]["b"])
+        q = (hdn @ lp["self_attn"]["wq"]).reshape(b, 1, h, hd)
+        k1 = (hdn @ lp["self_attn"]["wk"]).reshape(b, 1, h, hd)
+        v1 = (hdn @ lp["self_attn"]["wv"]).reshape(b, 1, h, hd)
+        sk = jax.lax.dynamic_update_slice(sk, k1, (0, t, 0, 0))
+        sv = jax.lax.dynamic_update_slice(sv, v1, (0, t, 0, 0))
+        x = x + _sdpa(q, sk, sv, mask, cfg) @ lp["self_attn"]["wo"]
+        hdn = layer_norm(x, lp["ln2"]["g"], lp["ln2"]["b"])
+        x = x + _cross(lp["cross_attn"], hdn, mk, mv, cfg)
+        hdn = layer_norm(x, lp["ln3"]["g"], lp["ln3"]["b"])
+        x = x + mlp_apply(lp["mlp"], hdn, "gelu")
+        return x, (sk, sv)
+
+    x, (sks, svs) = jax.lax.scan(
+        body, x, (params["dec"], cache["self_k"], cache["self_v"],
+                  cache["mem_k"], cache["mem_v"]),
+        unroll=scan_unroll(cfg.num_layers),
+    )
+    x = layer_norm(x, params["dec_ln"]["g"], params["dec_ln"]["b"])
+    logits = x @ params["embed"].T
+    return logits, {**cache, "t": t + 1, "self_k": sks, "self_v": svs}

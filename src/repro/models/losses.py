@@ -1,0 +1,39 @@
+"""Loss functions, sharding-aware.
+
+The cross-entropy is written so that GSPMD can keep the vocab dimension
+sharded end-to-end (one-hot einsum instead of gather; fp32 reductions):
+with logits (B, S, V) sharded (data, None, model), the only cross-shard
+traffic is the scalar-tree all-reduce of the reductions — the full-logit
+gather a take_along_axis would induce never happens.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["softmax_cross_entropy", "next_token_loss"]
+
+
+def softmax_cross_entropy(
+    logits: jnp.ndarray, labels: jnp.ndarray, mask: jnp.ndarray | None = None
+) -> jnp.ndarray:
+    """logits (..., V) any float dtype; labels (...) int32.  Mean over masked
+    positions, fp32."""
+    l32 = logits.astype(jnp.float32)
+    m = jnp.max(l32, axis=-1, keepdims=True)
+    lse = jnp.squeeze(m, -1) + jnp.log(jnp.sum(jnp.exp(l32 - m), axis=-1))
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    ll = jnp.sum(onehot * l32, axis=-1)
+    nll = lse - ll
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def next_token_loss(
+    logits: jnp.ndarray, tokens: jnp.ndarray, *, shift: int = 1
+) -> jnp.ndarray:
+    """Causal LM loss: logits[:, :-shift] predict tokens[:, shift:]."""
+    return softmax_cross_entropy(logits[:, :-shift], tokens[:, shift:])

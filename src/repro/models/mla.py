@@ -1,0 +1,155 @@
+"""Multi-head Latent Attention (DeepSeek V2/V3).
+
+Train/prefill: expand the compressed KV latent to full K/V heads and run
+standard attention.  Decode: the ABSORBED path — fold the up-projections
+into the query/output so attention runs directly against the compressed
+cache of (kv_lora_rank + qk_rope_dim) per token, independent of head count.
+That cache compression is what makes the deepseek archs' decode_32k cells
+fit, and the absorbed matmuls are the beyond-paper perf lever for them.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, dense_init, reduce_boundary, rms_norm, rope
+
+__all__ = ["mla_init", "mla_attention", "mla_decode", "init_mla_cache"]
+
+NEG_INF = -1e30
+
+
+def mla_init(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    d, h = cfg.d_model, cfg.num_heads
+    nope, pe, v = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    p: dict = {}
+    if cfg.q_lora_rank:
+        p["wq_a"] = dense_init(ks[0], (d, cfg.q_lora_rank), dtype=dtype)
+        p["q_norm"] = jnp.zeros((cfg.q_lora_rank,), dtype)
+        p["wq_b"] = dense_init(
+            ks[1], (cfg.q_lora_rank, h * (nope + pe)), dtype=dtype
+        )
+    else:
+        p["wq"] = dense_init(ks[0], (d, h * (nope + pe)), dtype=dtype)
+    p["wkv_a"] = dense_init(ks[2], (d, cfg.kv_lora_rank + pe), dtype=dtype)
+    p["kv_norm"] = jnp.zeros((cfg.kv_lora_rank,), dtype)
+    p["wkv_b"] = dense_init(ks[3], (cfg.kv_lora_rank, h * (nope + v)), dtype=dtype)
+    p["wo"] = dense_init(ks[4], (h * v, d), fan_in=h * v, dtype=dtype)
+    return p
+
+
+def _q_proj(params, x, cfg: ModelConfig):
+    b, s, _ = x.shape
+    h, nope, pe = cfg.num_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    if cfg.q_lora_rank:
+        q = rms_norm(x @ params["wq_a"], params["q_norm"], cfg.norm_eps)
+        q = q @ params["wq_b"]
+    else:
+        q = x @ params["wq"]
+    q = q.reshape(b, s, h, nope + pe)
+    return q[..., :nope], q[..., nope:]
+
+
+def _kv_latent(params, x, positions, cfg: ModelConfig):
+    """Returns (c_kv normed (B,S,R), k_pe roped (B,S,pe))."""
+    pe = cfg.qk_rope_dim
+    kv_a = x @ params["wkv_a"]
+    c_kv = rms_norm(kv_a[..., : cfg.kv_lora_rank], params["kv_norm"], cfg.norm_eps)
+    k_pe = kv_a[..., cfg.kv_lora_rank :]
+    cos, sin = rope(positions, pe, cfg.rope_theta)
+    if positions.ndim == 1:
+        cos, sin = cos[None], sin[None]
+    k_pe = apply_rope(k_pe[:, :, None, :], cos, sin)[:, :, 0, :]
+    return c_kv, k_pe
+
+
+def mla_attention(
+    params: dict, x: jnp.ndarray, positions: jnp.ndarray, cfg: ModelConfig
+) -> jnp.ndarray:
+    """Full-sequence MLA (train / prefill): expand latent, standard SDPA."""
+    b, s, _ = x.shape
+    h, nope, pe, vd = cfg.num_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_pe = _q_proj(params, x, cfg)
+    cos, sin = rope(positions, pe, cfg.rope_theta)
+    if positions.ndim == 1:
+        cos, sin = cos[None], sin[None]
+    q_pe = apply_rope(q_pe, cos, sin)
+
+    c_kv, k_pe = _kv_latent(params, x, positions, cfg)
+    kv = (c_kv @ params["wkv_b"]).reshape(b, s, h, nope + vd)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+
+    scale = 1.0 / jnp.sqrt(float(nope + pe))
+    s_nope = jnp.einsum(
+        "bshd,bthd->bhst", q_nope.astype(jnp.float32), k_nope.astype(jnp.float32)
+    )
+    s_pe = jnp.einsum(
+        "bshd,btd->bhst", q_pe.astype(jnp.float32), k_pe.astype(jnp.float32)
+    )
+    scores = (s_nope + s_pe) * scale
+    pos2 = positions if positions.ndim == 2 else positions[None]
+    causal = pos2[..., None, :] <= pos2[..., :, None]
+    scores = jnp.where(causal[:, None, :, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", w, v.astype(jnp.float32))
+    out = reduce_boundary(out.reshape(b, s, h * vd), x.dtype)
+    return out @ params["wo"]
+
+
+def init_mla_cache(
+    cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16
+) -> dict:
+    """Compressed cache: latent + shared rope key.  Per token per layer:
+    kv_lora_rank + qk_rope_dim values (e.g. 576 for deepseek), vs
+    2·H·head_dim for plain GQA."""
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_pe": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+        "pos": jnp.full((batch, max_len), -1, jnp.int32),
+    }
+
+
+def mla_decode(
+    params: dict, x: jnp.ndarray, cache: dict, t: jnp.ndarray, cfg: ModelConfig
+) -> tuple[jnp.ndarray, dict]:
+    """Absorbed single-token decode against the compressed cache.
+
+    score_h(t) = q_nope_h^T W_uk_h c_t + q_pe_h^T k_pe_t
+    out_h      = (Σ_t w_t c_t)^T W_uv_h
+    """
+    b = x.shape[0]
+    h, nope, pe, vd = cfg.num_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+
+    q_nope, q_pe = _q_proj(params, x, cfg)          # (B,1,H,nope), (B,1,H,pe)
+    pos_new = jnp.full((b, 1), t, jnp.int32)
+    cos, sin = rope(pos_new, pe, cfg.rope_theta)
+    q_pe = apply_rope(q_pe, cos, sin)
+
+    c_new, k_pe_new = _kv_latent(params, x, pos_new, cfg)
+    c_kv = jax.lax.dynamic_update_slice(cache["c_kv"], c_new, (0, t, 0))
+    k_pe = jax.lax.dynamic_update_slice(cache["k_pe"], k_pe_new, (0, t, 0))
+    pos = jax.lax.dynamic_update_slice(cache["pos"], pos_new, (0, t))
+
+    wkv_b = params["wkv_b"].reshape(r, h, nope + vd)
+    w_uk = wkv_b[..., :nope]                         # (R, H, nope)
+    w_uv = wkv_b[..., nope:]                         # (R, H, vd)
+
+    # Absorb W_uk into q: (B,1,H,nope) x (R,H,nope) -> (B,1,H,R)
+    q_c = jnp.einsum("bshn,rhn->bshr", q_nope.astype(jnp.float32),
+                     w_uk.astype(jnp.float32))
+    s_c = jnp.einsum("bshr,btr->bhst", q_c, c_kv.astype(jnp.float32))
+    s_pe = jnp.einsum(
+        "bshd,btd->bhst", q_pe.astype(jnp.float32), k_pe.astype(jnp.float32)
+    )
+    scores = (s_c + s_pe) / jnp.sqrt(float(nope + pe))
+    valid = (pos <= t) & (pos >= 0)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)              # (B,H,1,T)
+    out_c = jnp.einsum("bhst,btr->bshr", w, c_kv.astype(jnp.float32))
+    out = jnp.einsum("bshr,rhv->bshv", out_c, w_uv.astype(jnp.float32))
+    out = out.reshape(b, 1, h * vd).astype(x.dtype) @ params["wo"]
+    return out, {"c_kv": c_kv, "k_pe": k_pe, "pos": pos}

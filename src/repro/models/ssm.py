@@ -1,0 +1,236 @@
+"""Mamba2 blocks via the SSD (state-space duality) chunked algorithm
+(arXiv:2405.21060), adapted to TPU: the chunked form is matmul-dominated
+(MXU-friendly) — intra-chunk terms are Q×Q attention-like einsums and
+inter-chunk state passing is a short lax.scan over chunks, exactly the
+decomposition the SSD paper motivates for "tensor-core" hardware.
+
+Shapes (per block):
+  x_in (B, L, D) -> in_proj -> z (B,L,DI), xBC (B,L,DI+2GN), dt (B,L,H)
+  conv1d width W over xBC (causal), silu
+  SSD over x (B,L,H,P), A (H,), B/C (B,L,G,N), dt (B,L,H)
+  gated RMSNorm, out_proj (DI, D)
+
+Decode keeps (conv ring state (B, W-1, DI+2GN), ssm state (B,H,P,N)) —
+O(1) per token, the reason mamba2/zamba2 own the long_500k cells.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, reduce_boundary, rms_norm
+
+__all__ = [
+    "mamba_init",
+    "mamba_forward",
+    "mamba_decode",
+    "init_mamba_state",
+    "ssd_reference",
+]
+
+
+def _conv_dim(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+
+
+def mamba_init(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    d, di, h = cfg.d_model, cfg.d_inner, cfg.ssm_heads
+    cdim = _conv_dim(cfg)
+    ks = jax.random.split(key, 5)
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * di + 2 * cfg.ssm_groups * cfg.ssm_state + h), dtype=dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv_width, cdim), fan_in=cfg.ssm_conv_width, dtype=dtype),
+        "conv_b": jnp.zeros((cdim,), dtype),
+        "a_log": jnp.zeros((h,), jnp.float32),          # A = -exp(a_log) = -1
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),   # softplus(-2) ~ 0.12
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "gate_norm": jnp.zeros((di,), dtype),
+        "w_out": dense_init(ks[4], (di, d), fan_in=di, dtype=dtype),
+    }
+
+
+def _split_proj(params, x, cfg: ModelConfig):
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    proj = x @ params["w_in"]
+    z = proj[..., :di]
+    xbc = proj[..., di : di + di + 2 * g * n]
+    dt = proj[..., di + di + 2 * g * n :].astype(jnp.float32)
+    return z, xbc, dt
+
+
+def _causal_conv(params, xbc, cfg: ModelConfig):
+    """Depthwise causal conv, width W: y_t = sum_w w[w]*x[t-W+1+w] + b."""
+    w = cfg.ssm_conv_width
+    pad = jnp.pad(xbc, ((0, 0), (w - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :] * params["conv_w"][i][None, None, :]
+        for i in range(w)
+    )
+    return jax.nn.silu((out + params["conv_b"]).astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _split_xbc(xbc, cfg: ModelConfig):
+    b, l, _ = xbc.shape
+    di, g, n, h, p = (
+        cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim,
+    )
+    xs = xbc[..., :di].reshape(b, l, h, p)
+    bs = xbc[..., di : di + g * n].reshape(b, l, g, n)
+    cs = xbc[..., di + g * n :].reshape(b, l, g, n)
+    return xs, bs, cs
+
+
+def _ssd_chunked(xs, dt, a, bs, cs, cfg: ModelConfig):
+    """SSD: xs (B,L,H,P) fp32, dt (B,L,H) fp32 (post-softplus), a (H,)
+    negative, bs/cs (B,L,G,N) fp32.  Returns y (B,L,H,P) fp32 and the final
+    state (B,H,P,N)."""
+    b, l, h, p = xs.shape
+    g, n = bs.shape[2], bs.shape[3]
+    q = min(cfg.ssm_chunk, l)
+    assert l % q == 0, f"L={l} % chunk={q}"
+    nc = l // q
+    rep = h // g
+
+    da = dt * a[None, None, :]                          # (B,L,H) <= 0
+    xdt = xs * dt[..., None]                            # input scaled by dt
+
+    # chunked views
+    da_c = da.reshape(b, nc, q, h)
+    x_c = xdt.reshape(b, nc, q, h, p)
+    b_c = bs.reshape(b, nc, q, g, n)
+    c_c = cs.reshape(b, nc, q, g, n)
+
+    cum = jnp.cumsum(da_c, axis=2)                      # (B,NC,Q,H) inclusive
+    total = cum[:, :, -1:, :]                           # (B,NC,1,H)
+
+    # -- intra-chunk (attention-like, MXU) ---------------------------------
+    # decay[i,j] = exp(cum_i - cum_j) for i >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # (B,NC,Qi,Qj,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bcign,bcjgn->bcgij", c_c, b_c)          # (B,NC,G,Qi,Qj)
+    cb = jnp.repeat(cb, rep, axis=2)                          # (B,NC,H,Qi,Qj)
+    scores = cb * jnp.moveaxis(decay, -1, 2)                  # (B,NC,H,Qi,Qj)
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", scores, x_c)
+
+    # -- chunk states -------------------------------------------------------
+    # S_c = sum_j exp(total - cum_j) B_j (x_j dt_j)
+    w_state = jnp.exp(total - cum)                            # (B,NC,Q,H)
+    b_h = jnp.repeat(b_c, rep, axis=3)                        # (B,NC,Q,H,N)
+    s_c = jnp.einsum("bcjhn,bcjhp,bcjh->bchpn", b_h, x_c, w_state)
+
+    # -- inter-chunk scan ------------------------------------------------------
+    chunk_decay = jnp.exp(total[:, :, 0, :])                  # (B,NC,H)
+
+    def step(carry, inp):
+        s_prev = carry
+        s_new, dec = inp
+        s = s_prev * dec[0][..., None, None] + s_new
+        return s, s_prev
+
+    s_c_t = jnp.moveaxis(s_c, 1, 0)                           # (NC,B,H,P,N)
+    dec_t = jnp.moveaxis(chunk_decay, 1, 0)[:, None]          # (NC,1,B,H)
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final_state, s_prevs = jax.lax.scan(step, init, (s_c_t, dec_t))
+    s_prev = jnp.moveaxis(s_prevs, 0, 1)                      # (B,NC,H,P,N)
+
+    # y_inter[i] = exp(cum_i) * C_i . S_prev
+    c_h = jnp.repeat(c_c, rep, axis=3)                        # (B,NC,Q,H,N)
+    y_inter = jnp.einsum(
+        "bcihn,bchpn,bcih->bcihp", c_h, s_prev, jnp.exp(cum)
+    )
+    y = (y_intra + y_inter).reshape(b, l, h, p)
+    return y, final_state
+
+
+def ssd_reference(xs, dt, a, bs, cs):
+    """Naive O(L) recurrence oracle (fp32): the ground truth for tests."""
+    b, l, h, p = xs.shape
+    g, n = bs.shape[2], bs.shape[3]
+    rep = h // g
+    da = dt * a[None, None, :]
+    xdt = xs * dt[..., None]
+    b_h = jnp.repeat(bs, rep, axis=2)
+    c_h = jnp.repeat(cs, rep, axis=2)
+
+    def step(state, inp):
+        x_t, da_t, b_t, c_t = inp
+        state = state * jnp.exp(da_t)[..., None, None] + jnp.einsum(
+            "bhn,bhp->bhpn", b_t, x_t
+        )
+        y_t = jnp.einsum("bhn,bhpn->bhp", c_t, state)
+        return state, y_t
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    xs_t = jnp.moveaxis(xdt, 1, 0)
+    da_t = jnp.moveaxis(da, 1, 0)
+    bs_t = jnp.moveaxis(b_h, 1, 0)
+    cs_t = jnp.moveaxis(c_h, 1, 0)
+    final, ys = jax.lax.scan(step, init, (xs_t, da_t, bs_t, cs_t))
+    return jnp.moveaxis(ys, 0, 1), final
+
+
+def mamba_forward(
+    params: dict, x: jnp.ndarray, cfg: ModelConfig
+) -> jnp.ndarray:
+    """Full-sequence Mamba2 block (train / prefill)."""
+    z, xbc, dt = _split_proj(params, x, cfg)
+    xbc = _causal_conv(params, xbc, cfg)
+    xs, bs, cs = _split_xbc(xbc, cfg)
+    dt = jax.nn.softplus(dt + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+    y, _ = _ssd_chunked(
+        xs.astype(jnp.float32), dt, a,
+        bs.astype(jnp.float32), cs.astype(jnp.float32), cfg,
+    )
+    y = y + params["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    b, l = x.shape[:2]
+    y = y.reshape(b, l, cfg.d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 params["gate_norm"], cfg.norm_eps)
+    return reduce_boundary(y, x.dtype) @ params["w_out"]
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, _conv_dim(cfg)), dtype),
+        "ssm": jnp.zeros(
+            (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+        ),
+    }
+
+
+def mamba_decode(
+    params: dict, x: jnp.ndarray, state: dict, cfg: ModelConfig
+) -> tuple[jnp.ndarray, dict]:
+    """One-token recurrent step.  x (B, 1, D)."""
+    z, xbc_new, dt = _split_proj(params, x, cfg)
+    # conv over ring buffer: window = [conv_state ; xbc_new]
+    window = jnp.concatenate([state["conv"], xbc_new], axis=1)  # (B, W, C)
+    conv = (
+        jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                   params["conv_w"].astype(jnp.float32))
+        + params["conv_b"].astype(jnp.float32)
+    )
+    xbc = jax.nn.silu(conv)[:, None, :].astype(x.dtype)          # (B,1,C)
+    xs, bs, cs = _split_xbc(xbc, cfg)
+    dt = jax.nn.softplus(dt + params["dt_bias"])                  # (B,1,H)
+    a = -jnp.exp(params["a_log"])
+    rep = cfg.ssm_heads // cfg.ssm_groups
+
+    da = (dt[:, 0] * a[None, :]).astype(jnp.float32)              # (B,H)
+    xdt = xs[:, 0].astype(jnp.float32) * dt[:, 0][..., None]
+    b_h = jnp.repeat(bs[:, 0].astype(jnp.float32), rep, axis=1)   # (B,H,N)
+    c_h = jnp.repeat(cs[:, 0].astype(jnp.float32), rep, axis=1)
+    ssm = state["ssm"] * jnp.exp(da)[..., None, None] + jnp.einsum(
+        "bhn,bhp->bhpn", b_h, xdt
+    )
+    y = jnp.einsum("bhn,bhpn->bhp", c_h, ssm)
+    y = y + params["d_skip"][None, :, None] * xs[:, 0].astype(jnp.float32)
+    y = y.reshape(x.shape[0], 1, cfg.d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 params["gate_norm"], cfg.norm_eps)
+    out = y @ params["w_out"]
+    return out, {"conv": window[:, 1:, :], "ssm": ssm}

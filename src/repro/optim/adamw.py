@@ -1,0 +1,158 @@
+"""AdamW with optional block-wise 8-bit moment state.
+
+Distributed-optimization rationale (DESIGN.md §4): at 671B params, fp32
+Adam moments alone are 5.4 TB — over 21 GB/chip on a 256-chip pod, past
+v5e's 16 GB.  Block-128 int8 moments with fp32 per-block scales (the
+bitsandbytes recipe, deterministic round-to-nearest) cut m+v from 8 to
+~2.06 bytes/param, and together with bf16 params bring the deepseek-v3
+train cell under HBM.  Quantization is exact-roundtrip-deterministic, so
+checkpoint/restore and the resume-determinism test hold bit-for-bit.
+
+The optimizer is pure-functional: (init, update) closures over
+hyperparameters, state is a plain pytree that inherits the params'
+sharding (moments/quantized moments are elementwise-shaped).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adamw", "Optimizer", "quantize_q8", "dequantize_q8"]
+
+_BLOCK = 128
+
+
+def quantize_q8(x: jnp.ndarray) -> dict:
+    """float -> {q: int8 (same shape as x), scale: f32 (..., ceil(last/128))}.
+
+    SHAPE-PRESERVING: q carries exactly the parameter's shape so it inherits
+    the parameter's PartitionSpec verbatim — de/quantization is elementwise
+    under GSPMD and induces no resharding collectives.  Blocks run along the
+    last dim (128 entries each, zero-padded tail)."""
+    x32 = x.astype(jnp.float32)
+    if x32.ndim == 0:
+        x32 = x32.reshape(1)
+    last = x32.shape[-1]
+    nb = -(-last // _BLOCK)
+    pad = nb * _BLOCK - last
+    xp = jnp.pad(x32, [(0, 0)] * (x32.ndim - 1) + [(0, pad)])
+    blocks = xp.reshape(*x32.shape[:-1], nb, _BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1) / 127.0          # (..., nb)
+    safe = jnp.where(scale > 0, scale, 1.0)[..., None]
+    q = jnp.clip(jnp.round(blocks / safe), -127, 127).astype(jnp.int8)
+    q = q.reshape(*x32.shape[:-1], nb * _BLOCK)[..., :last]
+    if x.ndim == 0:
+        q = q.reshape(())
+    return {"q": q.reshape(x.shape), "scale": scale}
+
+
+def dequantize_q8(qs: dict, shape: tuple, dtype=jnp.float32) -> jnp.ndarray:
+    q, scale = qs["q"], qs["scale"]
+    q32 = q.astype(jnp.float32)
+    if q32.ndim == 0:
+        q32 = q32.reshape(1)
+    last = q32.shape[-1]
+    nb = scale.shape[-1]
+    pad = nb * _BLOCK - last
+    qp = jnp.pad(q32, [(0, 0)] * (q32.ndim - 1) + [(0, pad)])
+    blocks = qp.reshape(*q32.shape[:-1], nb, _BLOCK)
+    out = (blocks * scale[..., None]).reshape(*q32.shape[:-1], nb * _BLOCK)
+    return out[..., :last].reshape(shape).astype(dtype)
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]
+
+
+def adamw(
+    lr: float | Callable[[jnp.ndarray], jnp.ndarray] = 1e-3,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    grad_clip: Optional[float] = 1.0,
+    quantize_moments: bool = False,
+    sequential_updates: bool = True,
+) -> Optimizer:
+    """``sequential_updates`` chains per-leaf updates through
+    jax.lax.optimization_barrier.  Without it XLA's scheduler may hold every
+    leaf's fp32 de/quantization temporaries live at once — measured 117 GB/dev
+    transient on the deepseek-v3 train cell (~11 full fp32 copies of the
+    param shard).  The barrier chain forces leaf-at-a-time liveness, so the
+    transient is O(largest leaf), not O(total params)."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        def zeros_like_moment(p):
+            if quantize_moments:
+                return quantize_q8(jnp.zeros(p.shape, jnp.float32))
+            return jnp.zeros(p.shape, jnp.float32)
+
+        return {
+            "count": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(zeros_like_moment, params),
+            "v": jax.tree.map(zeros_like_moment, params),
+        }
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+
+        if grad_clip is not None:
+            leaves = jax.tree.leaves(grads)
+            gnorm = jnp.sqrt(
+                sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves)
+            )
+            scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+        step_size = lr_fn(count)
+        bc1 = 1.0 - b1 ** count.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+        def one(g, m_q, v_q, p):
+            g32 = g.astype(jnp.float32)
+            m = (
+                dequantize_q8(m_q, p.shape) if quantize_moments else m_q
+            )
+            v = (
+                dequantize_q8(v_q, p.shape) if quantize_moments else v_q
+            )
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * g32 * g32
+            upd = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - step_size * upd).astype(p.dtype)
+            new_m = quantize_q8(m) if quantize_moments else m
+            new_v = quantize_q8(v) if quantize_moments else v
+            return new_p, new_m, new_v
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_p = treedef.flatten_up_to(params)
+        out = []
+        token = jnp.zeros((), jnp.float32)
+        for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+            if sequential_updates:
+                g, token = jax.lax.optimization_barrier((g, token))
+            new_p, new_m, new_v = one(g, m, v, p)
+            if sequential_updates:
+                # cheap data dependency on this leaf's completion
+                token = new_p.reshape(-1)[0].astype(jnp.float32)
+            out.append((new_p, new_m, new_v))
+        new_params = treedef.unflatten([o[0] for o in out])
+        new_state = {
+            "count": count,
+            "m": treedef.unflatten([o[1] for o in out]),
+            "v": treedef.unflatten([o[2] for o in out]),
+        }
+        return new_params, new_state
+
+    return Optimizer(init, update)

@@ -1,0 +1,67 @@
+"""Error-feedback int8 gradient compression: unbiasedness + convergence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.optim.compression import GradCompressor
+
+
+def test_roundtrip_error_bounded():
+    comp = GradCompressor()
+    g = {"w": jax.random.normal(jax.random.PRNGKey(0), (64, 256))}
+    r = comp.init(g)
+    restored, r = comp.compress_decompress(g, r)
+    err = jnp.abs(restored["w"] - g["w"]).max()
+    scale = jnp.abs(g["w"]).max() / 127.0
+    assert float(err) <= float(scale) * 1.01  # one quantization step
+
+
+def test_error_feedback_accumulates_to_zero_bias():
+    """Repeatedly compressing the SAME gradient must, summed over steps,
+    deliver the true total (EF re-injects the quantization error)."""
+    comp = GradCompressor()
+    g = {"w": jax.random.normal(jax.random.PRNGKey(1), (32, 128)) * 0.01}
+    r = comp.init(g)
+    delivered = jnp.zeros_like(g["w"])
+    n = 50
+    for _ in range(n):
+        restored, r = comp.compress_decompress(g, r)
+        delivered = delivered + restored["w"]
+    np.testing.assert_allclose(
+        delivered / n, g["w"], rtol=0, atol=float(jnp.abs(g["w"]).max()) / 127 / 5
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_sgd_with_compression_converges(seed):
+    """Least-squares SGD with compressed grads converges like uncompressed."""
+    rng = jax.random.PRNGKey(seed % 10_000)
+    k1, k2 = jax.random.split(rng)
+    A = jax.random.normal(k1, (64, 8))
+    x_true = jax.random.normal(k2, (8,))
+    y = A @ x_true
+
+    def loss(x):
+        return jnp.mean((A @ x - y) ** 2)
+
+    comp = GradCompressor()
+    x = jnp.zeros(8)
+    r = comp.init({"x": x})
+    for _ in range(300):
+        g = jax.grad(loss)(x)
+        restored, r = comp.compress_decompress({"x": g}, r)
+        x = x - 0.05 * restored["x"]
+    assert float(loss(x)) < 1e-3
+
+
+def test_wire_bytes_ratio():
+    """int8 + per-block f32 scales ≈ 1.03 bytes/param (4x less than f32)."""
+    from repro.optim.adamw import quantize_q8
+
+    g = jnp.zeros((1024, 1024))
+    q = quantize_q8(g)
+    wire = q["q"].size * 1 + q["scale"].size * 4
+    assert wire / g.size < 1.05

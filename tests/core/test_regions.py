@@ -1,0 +1,76 @@
+"""§4.1.2 geo-distribution control plane: routing, replication, compliance,
+fail-over."""
+
+import pytest
+
+from repro.core.regions import (
+    ComplianceError,
+    GeoPlacement,
+    GeoTopology,
+    Region,
+    RegionDownError,
+    ReplicationPolicy,
+)
+
+
+def _topo(fenced_home=False):
+    return GeoTopology(
+        regions={
+            "home": Region("home", geo_fenced=fenced_home),
+            "remote1": Region("remote1"),
+            "remote2": Region("remote2"),
+        },
+        local_latency_ms=1.0,
+        cross_region_latency_ms=60.0,
+    )
+
+
+def test_cross_region_access_serves_from_home():
+    geo = GeoPlacement(_topo(), "home", ReplicationPolicy.CROSS_REGION_ACCESS)
+    assert geo.route_read("home") == ("home", 1.0)
+    assert geo.route_read("remote1") == ("home", 60.0)
+    # replication requires the GEO_REPLICATED policy
+    with pytest.raises(ComplianceError):
+        geo.add_replica("remote1")
+
+
+def test_replication_makes_reads_local():
+    geo = GeoPlacement(_topo(), "home", ReplicationPolicy.GEO_REPLICATED)
+    geo.add_replica("remote1")
+    assert geo.route_read("remote1") == ("remote1", 1.0)
+    assert geo.route_read("remote2") == ("home", 60.0) or geo.route_read(
+        "remote2"
+    )[1] == 60.0
+
+
+def test_geo_fencing():
+    geo = GeoPlacement(_topo(fenced_home=True), "home",
+                       ReplicationPolicy.GEO_REPLICATED)
+    with pytest.raises(ComplianceError):
+        geo.add_replica("remote1")
+
+
+def test_failover_promotes_and_restores():
+    geo = GeoPlacement(_topo(), "home", ReplicationPolicy.GEO_REPLICATED)
+    geo.add_replica("remote1")
+    geo.mark_down("home")
+    assert geo.failover() == "remote1"
+    assert geo.route_read("home")[0] == "remote1"
+    geo.mark_up("home")
+    assert geo.failover() is None  # healthy home: nothing to do
+
+
+def test_no_healthy_replica_raises():
+    geo = GeoPlacement(_topo(), "home", ReplicationPolicy.CROSS_REGION_ACCESS)
+    geo.mark_down("home")
+    with pytest.raises(RegionDownError):
+        geo.route_read("remote1")
+    with pytest.raises(RegionDownError):
+        geo.failover()
+
+
+def test_read_log_records_routing():
+    geo = GeoPlacement(_topo(), "home", ReplicationPolicy.CROSS_REGION_ACCESS)
+    geo.route_read("remote1")
+    geo.route_read("home")
+    assert geo.read_log == [("remote1", "home", 60.0), ("home", "home", 1.0)]

@@ -1,0 +1,164 @@
+"""Scheduling subsystem (paper §3.1.1, §4.3): window-state tracking,
+non-overlap invariant, context-aware backfill, retries, resume."""
+
+import json
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduler import (
+    IntervalSet,
+    JobKind,
+    JobState,
+    Scheduler,
+)
+from repro.core.transform import FeatureWindow
+
+H = 3_600_000
+
+
+class TestIntervalSet:
+    def test_merge_and_gaps(self):
+        iv = IntervalSet()
+        iv.add(0, 10)
+        iv.add(20, 30)
+        iv.add(10, 20)  # touching intervals coalesce
+        assert iv.intervals == [(0, 30)]
+        assert iv.gaps_within(0, 30) == []
+        iv2 = IntervalSet([(0, 10), (20, 30)])
+        assert iv2.gaps_within(5, 25) == [(10, 20)]
+        assert iv2.covers(0, 10) and not iv2.covers(5, 15)
+
+    @settings(max_examples=200, deadline=None)
+    @given(
+        st.lists(
+            st.tuples(st.integers(0, 500), st.integers(1, 50)), min_size=1, max_size=20
+        )
+    )
+    def test_property_disjoint_sorted(self, spans):
+        """After arbitrary adds, intervals are sorted, disjoint, non-touching."""
+        iv = IntervalSet()
+        for s, l in spans:
+            iv.add(s, s + l)
+        out = iv.intervals
+        for (s1, e1), (s2, e2) in zip(out, out[1:]):
+            assert e1 < s2, out  # strictly disjoint with gaps
+        # coverage: every added point is covered
+        for s, l in spans:
+            assert iv.covers(s, s + l)
+
+
+def make_sched(cadence=H, unit=None):
+    s = Scheduler()
+    s.register_feature_set("fs", 1, schedule_interval=cadence, partition_window=unit)
+    return s
+
+
+class TestScheduledMaterialization:
+    def test_tick_generates_cadence_windows(self):
+        s = make_sched()
+        jobs = s.tick(now=3 * H + 5)
+        assert [(j.window.start, j.window.end) for j in jobs] == [
+            (0, H), (H, 2 * H), (2 * H, 3 * H),
+        ]
+        assert all(j.kind is JobKind.SCHEDULED for j in jobs)
+        # completing jobs updates data state
+        for j in jobs:
+            s.mark_running(j.job_id)
+            s.mark_succeeded(j.job_id)
+        assert s.is_materialized("fs", 1, 0, 3 * H)
+        assert s.tick(now=3 * H + 5) == []  # nothing new due
+
+    def test_overlap_invariant_enforced(self):
+        s = make_sched()
+        s.tick(now=H)
+        with pytest.raises(RuntimeError, match="invariant"):
+            s._enqueue(("fs", 1), FeatureWindow(0, H // 2), JobKind.BACKFILL)
+
+    def test_staleness_metric(self):
+        s = make_sched()
+        for j in s.tick(now=2 * H):
+            s.mark_running(j.job_id)
+            s.mark_succeeded(j.job_id)
+        assert s.staleness("fs", 1, now=2 * H + 500) == 500
+
+
+class TestBackfill:
+    def test_backfill_suspends_scheduled(self):
+        """§3.1.1: backfill temporarily suspends conflicting scheduled jobs,
+        which resume (or cancel if covered) afterwards."""
+        s = make_sched()
+        scheduled = s.tick(now=2 * H)
+        assert len(scheduled) == 2
+        backfill = s.request_backfill("fs", 1, FeatureWindow(0, 2 * H))
+        assert all(j.state is JobState.SUSPENDED for j in scheduled)
+        for j in backfill:
+            s.mark_running(j.job_id)
+            s.mark_succeeded(j.job_id)
+        resumed = s.resume_suspended()
+        assert resumed == []  # fully covered by the backfill -> cancelled
+        assert all(j.state is JobState.CANCELLED for j in scheduled)
+
+    def test_backfill_partitioned_and_coalesced(self):
+        """Backfill splits into unit windows and SKIPS already-materialized
+        sub-windows (context-aware partitioning)."""
+        s = make_sched(cadence=H, unit=H)
+        s.data_state[("fs", 1)].add(H, 2 * H)  # middle hour already done
+        jobs = s.request_backfill("fs", 1, FeatureWindow(0, 3 * H))
+        windows = sorted((j.window.start, j.window.end) for j in jobs)
+        assert windows == [(0, H), (2 * H, 3 * H)]
+
+    def test_backfill_against_running_job_rejected(self):
+        s = make_sched()
+        jobs = s.tick(now=H)
+        s.mark_running(jobs[0].job_id)
+        with pytest.raises(RuntimeError, match="running"):
+            s.request_backfill("fs", 1, FeatureWindow(0, H))
+
+
+class TestRetryAndResume:
+    def test_retry_then_nonrecoverable_alert(self):
+        s = make_sched()
+        (job,) = s.tick(now=H)
+        s.mark_running(job.job_id)
+        assert s.mark_failed(job.job_id, "boom")  # retry 1
+        assert s.mark_failed(job.job_id, "boom")  # retry 2
+        assert not s.mark_failed(job.job_id, "boom")  # attempts exhausted
+        assert job.state is JobState.FAILED
+        assert "non-recoverable" in s.alerts[0]
+
+    def test_json_roundtrip_requeues_interrupted(self):
+        """§3.1.2: a job RUNNING at checkpoint time resumes as QUEUED —
+        no data loss, no double-covering."""
+        s = make_sched()
+        jobs = s.tick(now=2 * H)
+        s.mark_running(jobs[0].job_id)
+        s.mark_succeeded(jobs[0].job_id)
+        s.mark_running(jobs[1].job_id)  # interrupted mid-flight
+        restored = Scheduler.from_json(s.to_json())
+        assert restored.jobs[jobs[0].job_id].state is JobState.SUCCEEDED
+        assert restored.jobs[jobs[1].job_id].state is JobState.QUEUED
+        assert restored.data_state[("fs", 1)].intervals == [(0, H)]
+        assert restored.schedule_cursor[("fs", 1)] == 2 * H
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(1, 10), st.integers(0, 5))
+    def test_property_no_active_overlap(self, hours, backfills):
+        """Whatever mix of ticks and backfills, active jobs never overlap."""
+        s = make_sched(cadence=H, unit=H)
+        s.tick(now=hours * H)
+        for i in range(backfills):
+            try:
+                s.request_backfill(
+                    "fs", 1, FeatureWindow(i * H // 2, i * H // 2 + H)
+                )
+            except RuntimeError:
+                pass
+        active = [
+            j for j in s.jobs.values()
+            if j.state in (JobState.QUEUED, JobState.RUNNING)
+        ]
+        for a in active:
+            for b in active:
+                if a.job_id < b.job_id:
+                    assert not a.window.overlaps(b.window)

@@ -1,0 +1,146 @@
+"""Storage-scheme semantics (paper §4.5): Algorithm 2 + the Fig. 5 example."""
+
+import numpy as np
+import pytest
+
+from repro.core.assets import Entity, Feature, FeatureSetSpec, MaterializationSettings
+from repro.core.dsl import UDFTransform
+from repro.core.offline_store import CREATION_TS, EVENT_TS, OfflineStore
+from repro.core.online_store import OnlineStore
+from repro.core.table import Table
+
+
+def make_spec(name="fs", version=1, ttl=None):
+    return FeatureSetSpec(
+        name=name,
+        version=version,
+        entity=Entity("cust", ("entity_id",)),
+        features=(Feature("f0"),),
+        source_name="src",
+        transform=UDFTransform(lambda df, ctx: df, name="id"),
+        materialization=MaterializationSettings(True, True, online_ttl=ttl),
+    )
+
+
+def frame(ids, ts, vals):
+    return Table(
+        {
+            "entity_id": np.asarray(ids, np.int64),
+            "ts": np.asarray(ts, np.int64),
+            "f0": np.asarray(vals, np.float32),
+        }
+    )
+
+
+class TestPaperFig5Example:
+    """R0..R3 with event/creation timestamps; offline keeps all, online keeps
+    max(tuple(event_ts, creation_ts))."""
+
+    def setup_method(self):
+        self.spec = make_spec()
+        self.offline = OfflineStore(num_shards=2)
+        self.online = OnlineStore(num_partitions=4)
+        # one entity; event t0<t1<t2; creation t0'<t1'<t2'<t3'
+        self.t = {"t0": 100, "t1": 200, "t2": 300}
+        self.c = {"t0p": 150, "t1p": 250, "t2p": 350, "t3p": 450}
+
+    def _merge(self, ev, cr, val):
+        f = frame([7], [ev], [val])
+        self.offline.merge(self.spec, f, cr)
+        self.online.merge(self.spec, f, cr)
+
+    def test_paper_fig5_example(self):
+        # T1: after R0, R1, R2 materialized
+        self._merge(self.t["t0"], self.c["t0p"], 0.0)  # R0
+        self._merge(self.t["t1"], self.c["t1p"], 1.0)  # R1
+        self._merge(self.t["t2"], self.c["t2p"], 2.0)  # R2
+        assert self.offline.num_rows("fs", 1) == 3
+        rec = self.online.get_record("fs", 1, [np.array([7])])[0]
+        assert rec[EVENT_TS] == self.t["t2"] and rec["features"][0] == 2.0
+
+        # T2: R3 = late re-materialization of event t1 with creation t3'
+        self._merge(self.t["t1"], self.c["t3p"], 3.0)  # R3
+        assert self.offline.num_rows("fs", 1) == 4  # offline keeps ALL 4
+        rec = self.online.get_record("fs", 1, [np.array([7])])[0]
+        # online still holds R2: R3.event_ts < R2.event_ts
+        assert rec[EVENT_TS] == self.t["t2"] and rec["features"][0] == 2.0
+        assert self.online.num_records("fs", 1) == 1
+
+
+class TestAlgorithm2Offline:
+    def test_insert_iff_key_absent(self):
+        spec, store = make_spec(), OfflineStore(num_shards=2)
+        f = frame([1, 2], [10, 20], [1.0, 2.0])
+        assert store.merge(spec, f, 100) == 2
+        # identical merge (same creation_ts): full no-op — retry safety
+        assert store.merge(spec, f, 100) == 0
+        assert store.num_rows("fs", 1) == 2
+        # same (id, event_ts) but NEW creation_ts: new record (history kept)
+        assert store.merge(spec, f, 200) == 2
+        assert store.num_rows("fs", 1) == 4
+
+    def test_creation_after_event_enforced(self):
+        spec, store = make_spec(), OfflineStore()
+        with pytest.raises(ValueError, match="creation_timestamp"):
+            store.merge(spec, frame([1], [500], [1.0]), 400)
+
+
+class TestAlgorithm2Online:
+    def setup_method(self):
+        self.spec = make_spec()
+        self.store = OnlineStore(num_partitions=2, initial_capacity=8)
+
+    def rec(self):
+        return self.store.get_record("fs", 1, [np.array([5])])[0]
+
+    def test_all_branches(self):
+        # insert (key absent)
+        self.store.merge(self.spec, frame([5], [100], [1.0]), 150)
+        assert self.rec()[EVENT_TS] == 100
+        # override: newer event_ts
+        self.store.merge(self.spec, frame([5], [200], [2.0]), 250)
+        assert self.rec()[EVENT_TS] == 200 and self.rec()["features"][0] == 2.0
+        # no-op: older event_ts
+        self.store.merge(self.spec, frame([5], [100], [9.0]), 300)
+        assert self.rec()["features"][0] == 2.0
+        # override: same event_ts, newer creation_ts
+        self.store.merge(self.spec, frame([5], [200], [3.0]), 400)
+        assert self.rec()["features"][0] == 3.0 and self.rec()[CREATION_TS] == 400
+        # no-op: same event_ts, older creation_ts
+        self.store.merge(self.spec, frame([5], [200], [8.0]), 350)
+        assert self.rec()["features"][0] == 3.0
+        assert self.store.noops == 2 and self.store.overrides == 2
+
+    def test_growth(self):
+        ids = np.arange(100, dtype=np.int64)
+        self.store.merge(self.spec, frame(ids, [100] * 100, ids.astype(float)), 200)
+        assert self.store.num_records("fs", 1) == 100
+        vals, found = self.store.lookup("fs", 1, [ids], use_kernel=False)
+        assert found.all() and np.allclose(vals[:, 0], ids)
+
+    def test_ttl(self):
+        spec = make_spec(ttl=1000)
+        store = OnlineStore(num_partitions=2)
+        store.merge(spec, frame([1], [100], [1.0]), 200)
+        _, found = store.lookup("fs", 1, [np.array([1])], now=900, use_kernel=False)
+        assert found[0]
+        _, found = store.lookup("fs", 1, [np.array([1])], now=1500, use_kernel=False)
+        assert not found[0]  # expired: creation 200 + ttl 1000 < 1500
+        assert store.sweep("fs", 1, now=1500) == 1
+        assert store.num_records("fs", 1) == 0
+
+
+def test_latest_per_key_matches_tuple_max():
+    spec, store = make_spec(), OfflineStore(num_shards=3)
+    rng = np.random.default_rng(0)
+    for cr in [1000, 2000, 3000]:
+        ids = rng.integers(0, 20, 30)
+        ts = rng.integers(0, 900, 30)
+        store.merge(spec, frame(ids, ts, ts.astype(float)), cr)
+    latest = store.latest_per_key("fs", 1)
+    hist = store.read("fs", 1)
+    for i in range(len(latest)):
+        k = latest["__key__"][i]
+        mask = hist["__key__"] == k
+        pairs = list(zip(hist[EVENT_TS][mask], hist[CREATION_TS][mask]))
+        assert (latest[EVENT_TS][i], latest[CREATION_TS][i]) == max(pairs)

@@ -1,0 +1,126 @@
+"""§4.4 leakage prevention + online/offline skew, asserted end-to-end.
+
+  * training batches can never contain tokens whose event_ts exceeds the
+    loader's data-availability clock (minus the expected delay)
+  * the online store's served context equals the offline store's latest
+    record for the same entity (no online/offline skew)
+  * late-arriving source data (jitter) is held back by expected_delay
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.assets import Entity, Feature, FeatureSetSpec, MaterializationSettings
+from repro.core.dsl import DslTransform, RollingAgg
+from repro.core.featurestore import FeatureStore
+from repro.core.offline_store import CREATION_TS, EVENT_TS
+from repro.core.table import Table
+from repro.data.loader import FeatureStoreLoader, TokenFeatureSet
+from repro.data.sources import SyntheticEventSource, TokenEventSource
+
+HOUR = 3_600_000
+
+
+def _lm_plane(seed=0):
+    src = TokenEventSource("tok", seed=seed, vocab_size=512, num_docs=32,
+                           chunk_len=16, chunks_per_bucket=64)
+    fs = FeatureStore("leak-test", interpret=True)
+    fs.register_source(src)
+    spec = fs.create_feature_set(TokenFeatureSet(src))
+    loader = FeatureStoreLoader(store=fs, spec=spec, seq_len=32, batch_size=4,
+                                chunk_len=16, seed=seed)
+    return fs, loader
+
+
+@settings(max_examples=8, deadline=None)
+@given(step=st.integers(0, 50), hours=st.integers(2, 12))
+def test_no_token_from_the_future(step, hours):
+    fs, loader = _lm_plane()
+    loader.advance(hours * HOUR)
+    batch = loader.sample_batch(step)
+    # the leakage property: every chunk in the batch was materialized from
+    # events at or before the observation clock
+    assert (batch["__max_event_ts__"] <= batch["__observation_ts__"]).all()
+
+
+def test_clock_monotonicity_and_determinism():
+    fs, loader = _lm_plane()
+    loader.advance(6 * HOUR)
+    b1 = loader.sample_batch(7)
+    b2 = loader.sample_batch(7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])  # (seed, step) pure
+    # advancing the clock changes eligibility, not determinism
+    loader.advance(9 * HOUR)
+    b3 = loader.sample_batch(7)
+    assert (b3["__max_event_ts__"] <= 9 * HOUR).all()
+
+
+def test_online_equals_offline_latest():
+    """§4.5.2: online must serve max(tuple(event_ts, creation_ts)) per id."""
+    fs = FeatureStore("skew-test", interpret=True)
+    src = SyntheticEventSource("tx", num_entities=24, events_per_bucket=120)
+    fs.register_source(src)
+    fs.create_feature_set(
+        FeatureSetSpec(
+            name="act", version=1,
+            entity=Entity("customer", ("entity_id",)),
+            features=(Feature("s2", "float32"),),
+            source_name="tx",
+            transform=DslTransform("entity_id", "ts",
+                                   [RollingAgg("s2", "amount", 2 * HOUR, "sum")]),
+            timestamp_col="ts", source_lookback=2 * HOUR,
+            materialization=MaterializationSettings(
+                offline_enabled=True, online_enabled=True, schedule_interval=HOUR
+            ),
+        )
+    )
+    fs.tick(now=8 * HOUR)
+
+    hist = fs.offline.read("act", 1)
+    ids = np.unique(hist["entity_id"])[:16].astype(np.int64)
+    vals, found = fs.get_online_features("act", 1, [ids])
+    assert found.all()
+    for i, eid in enumerate(ids):
+        rows = np.nonzero(hist["entity_id"] == eid)[0]
+        order = np.lexsort((hist[CREATION_TS][rows], hist[EVENT_TS][rows]))
+        latest = rows[order[-1]]
+        np.testing.assert_allclose(vals[i, 0], hist["s2"][latest], rtol=1e-6)
+
+
+def test_expected_delay_holds_back_late_data():
+    """A feature set with expected_delay D must not serve values within D of
+    the observation time (the paper's 'expected delay of source and feature
+    data')."""
+    fs = FeatureStore("delay-test", interpret=True)
+    src = SyntheticEventSource("tx", num_entities=8, events_per_bucket=60)
+    fs.register_source(src)
+    fs.create_feature_set(
+        FeatureSetSpec(
+            name="act", version=1,
+            entity=Entity("customer", ("entity_id",)),
+            features=(Feature("s2", "float32"),),
+            source_name="tx",
+            transform=DslTransform("entity_id", "ts",
+                                   [RollingAgg("s2", "amount", 2 * HOUR, "sum")]),
+            timestamp_col="ts", source_lookback=2 * HOUR,
+            expected_delay=HOUR,
+            materialization=MaterializationSettings(
+                offline_enabled=True, online_enabled=True, schedule_interval=HOUR
+            ),
+        )
+    )
+    fs.tick(now=6 * HOUR)
+    spine = Table({
+        "entity_id": np.arange(8, dtype=np.int64),
+        "ts": np.full(8, 4 * HOUR, np.int64),
+    })
+    frame = fs.get_offline_features(spine, [("act", 1)])
+    hist = fs.offline.read("act", 1)
+    for i in range(8):
+        if not frame["act:v1:__found__"][i]:
+            continue
+        rows = np.nonzero(
+            (hist["entity_id"] == spine["entity_id"][i])
+            & (hist["s2"] == frame["act:v1:s2"][i])
+        )[0]
+        assert (hist[EVENT_TS][rows] <= 4 * HOUR - HOUR).any()

@@ -1,0 +1,41 @@
+"""End-to-end driver fault tolerance: kill -> restart -> identical result.
+
+The paper's §3.1.2 resume guarantee ("safely resume from where it left off
+without any data loss"), asserted across the WHOLE stack: train state,
+optimizer moments (deterministically quantized), the feature-store
+scheduler's interval state, and the loader's data clock all ride the
+checkpoint.
+"""
+
+import numpy as np
+import pytest
+
+from repro.launch import train
+
+ARGS = ["--arch", "gemma-2b", "--steps", "12", "--batch", "2", "--seq", "32",
+        "--ckpt-every", "4", "--log-every", "100"]
+
+
+def test_kill_restart_bit_identical(tmp_path):
+    d1 = str(tmp_path / "uninterrupted")
+    ref = train.main(ARGS + ["--ckpt-dir", d1])
+    assert ref["steps_run"] == 12
+
+    d2 = str(tmp_path / "killed")
+    with pytest.raises(SystemExit) as e:
+        train.main(ARGS + ["--ckpt-dir", d2, "--kill-at", "9"])
+    assert e.value.code == 17  # simulated node failure
+
+    resumed = train.main(ARGS + ["--ckpt-dir", d2])
+    # resumed from step 8 checkpoint -> runs 9..11
+    assert resumed["start_step"] == 9
+    # the tail of the loss curve must match the uninterrupted run exactly:
+    # same data (loader clock restored), same state (deterministic ckpt)
+    np.testing.assert_allclose(
+        resumed["losses"], ref["losses"][9:], rtol=0, atol=0
+    )
+
+
+def test_loss_decreases_over_training(tmp_path):
+    res = train.main(ARGS)
+    assert res["last_loss"] < res["first_loss"]

@@ -1,0 +1,132 @@
+"""pit_join counting-search kernel vs pure-jnp oracle + brute force."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.pit_join.ops import pit_search
+from repro.kernels.pit_join.ref import pit_search_ref
+
+
+def _make_table(rng, n_seg, max_rows):
+    """Segmented table: rows sorted by ts within each segment."""
+    seg_sizes = rng.integers(0, max_rows, size=n_seg)
+    table_ts = []
+    bounds = []
+    off = 0
+    for sz in seg_sizes:
+        ts = np.sort(rng.integers(0, 1000, size=sz))
+        table_ts.append(ts)
+        bounds.append((off, off + sz))
+        off += sz
+    table = np.concatenate(table_ts) if table_ts else np.zeros(0, np.int64)
+    return table.astype(np.int32), bounds
+
+
+def _make_queries(rng, bounds, n_q):
+    segs = rng.integers(0, len(bounds), size=n_q)
+    q_lo = np.array([bounds[s][0] for s in segs], np.int32)
+    q_hi = np.array([bounds[s][1] for s in segs], np.int32)
+    q_ts = rng.integers(-50, 1100, size=n_q).astype(np.int32)
+    return q_ts, q_lo, q_hi
+
+
+def _brute(table, q_ts, q_lo, q_hi):
+    idx = np.full(len(q_ts), -1, np.int64)
+    valid = np.zeros(len(q_ts), bool)
+    for i, (t, lo, hi) in enumerate(zip(q_ts, q_lo, q_hi)):
+        cand = [r for r in range(lo, hi) if table[r] <= t]
+        if cand:
+            idx[i] = max(cand)
+            valid[i] = True
+    return idx, valid
+
+
+@pytest.mark.parametrize("n_seg,max_rows,n_q", [(1, 50, 17), (5, 200, 300), (20, 30, 64)])
+def test_pit_search_vs_brute(n_seg, max_rows, n_q):
+    rng = np.random.default_rng(n_seg * 100 + n_q)
+    table, bounds = _make_table(rng, n_seg, max_rows)
+    q_ts, q_lo, q_hi = _make_queries(rng, bounds, n_q)
+    idx, valid = pit_search(
+        jnp.asarray(table), jnp.asarray(q_ts), jnp.asarray(q_lo), jnp.asarray(q_hi)
+    )
+    b_idx, b_valid = _brute(table, q_ts, q_lo, q_hi)
+    np.testing.assert_array_equal(np.asarray(valid), b_valid)
+    np.testing.assert_array_equal(np.asarray(idx)[b_valid], b_idx[b_valid])
+
+
+@pytest.mark.parametrize("q_block,rows", [(512, 8), (128, 8), (512, 16), (256, 32)])
+def test_pit_search_tilings(q_block, rows):
+    rng = np.random.default_rng(q_block + rows)
+    table, bounds = _make_table(rng, 6, 300)
+    q_ts, q_lo, q_hi = _make_queries(rng, bounds, 200)
+    idx, valid = pit_search(
+        jnp.asarray(table), jnp.asarray(q_ts), jnp.asarray(q_lo), jnp.asarray(q_hi),
+        q_block=q_block, table_rows_per_block=rows,
+    )
+    ref_idx, ref_valid = pit_search_ref(
+        jnp.asarray(table), jnp.asarray(q_ts), jnp.asarray(q_lo), jnp.asarray(q_hi)
+    )
+    np.testing.assert_array_equal(np.asarray(valid), np.asarray(ref_valid))
+    v = np.asarray(ref_valid)
+    np.testing.assert_array_equal(np.asarray(idx)[v], np.asarray(ref_idx)[v])
+
+
+def test_pit_search_empty_table_and_empty_segments():
+    # all-empty segments: hi == lo
+    table = jnp.asarray(np.zeros(0, np.int32))
+    q = jnp.asarray(np.array([5, 10], np.int32))
+    z = jnp.asarray(np.zeros(2, np.int32))
+    idx, valid = pit_search(table, q, z, z)
+    assert not np.asarray(valid).any()
+
+
+def test_pit_search_exact_timestamp_is_inclusive():
+    """'nearest past' includes a record AT the observation time (<=)."""
+    table = jnp.asarray(np.array([10, 20, 30], np.int32))
+    q_ts = jnp.asarray(np.array([20], np.int32))
+    lo = jnp.asarray(np.array([0], np.int32))
+    hi = jnp.asarray(np.array([3], np.int32))
+    idx, valid = pit_search(table, q_ts, lo, hi)
+    assert bool(valid[0]) and int(idx[0]) == 1
+
+
+def test_pit_search_no_future_leak():
+    """A query strictly before every record must be invalid — the §4.4
+    leakage guarantee at the kernel level."""
+    table = jnp.asarray(np.array([100, 200], np.int32))
+    idx, valid = pit_search(
+        table,
+        jnp.asarray(np.array([99], np.int32)),
+        jnp.asarray(np.array([0], np.int32)),
+        jnp.asarray(np.array([2], np.int32)),
+    )
+    assert not bool(valid[0])
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_seg=st.integers(1, 8),
+    n_q=st.integers(1, 300),
+)
+def test_pit_search_property(seed, n_seg, n_q):
+    rng = np.random.default_rng(seed)
+    table, bounds = _make_table(rng, n_seg, 120)
+    q_ts, q_lo, q_hi = _make_queries(rng, bounds, n_q)
+    idx, valid = pit_search(
+        jnp.asarray(table), jnp.asarray(q_ts), jnp.asarray(q_lo), jnp.asarray(q_hi)
+    )
+    idx, valid = np.asarray(idx), np.asarray(valid)
+    # properties: result in segment, ts <= query ts, and next row (if any) > ts
+    for i in range(n_q):
+        if valid[i]:
+            r = idx[i]
+            assert q_lo[i] <= r < q_hi[i]
+            assert table[r] <= q_ts[i]
+            if r + 1 < q_hi[i]:
+                assert table[r + 1] > q_ts[i]
+        else:
+            in_seg = table[q_lo[i] : q_hi[i]]
+            assert (in_seg > q_ts[i]).all() or len(in_seg) == 0

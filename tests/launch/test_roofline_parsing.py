@@ -1,0 +1,62 @@
+"""Unit tests for the roofline instrument itself (HLO text parsing).
+
+The §Perf conclusions rest on collective_bytes / dus_overcount /
+promoted-all-reduce accounting being right — so they get their own tests
+against synthetic post-SPMD HLO snippets.
+"""
+
+from repro.launch.hlo_tools import collective_sites, top_tensors
+from repro.launch.roofline import collective_bytes, dus_overcount
+
+HLO = """
+HloModule jit_step
+
+%add.5 (a: f32[], b: f32[]) -> f32[] {
+  ROOT %r = f32[] add(f32[] %a, f32[] %b)
+}
+
+ENTRY %main {
+  %p0 = bf16[16,4096,7168]{2,1,0} parameter(0)
+  %p1 = f32[16,1024]{1,0} parameter(1)
+  %ar0 = bf16[16,4096,7168]{2,1,0} all-reduce(%p0), to_apply=%add.5
+  %cvt = f32[16,4096,7168]{2,1,0} convert(%ar0)
+  %ar1 = f32[16,4096,7168]{2,1,0} all-reduce(%cvt), to_apply=%add.5.clone_promoted
+  %ag = f32[16,1024]{1,0} all-gather(%p1), dimensions={0}
+  %a2a = f32[16,1024]{1,0} all-to-all(%p1), dimensions={0}
+  %upd = bf16[16,1,7168]{2,1,0} parameter(2)
+  %dus = bf16[16,4096,7168]{2,1,0} dynamic-update-slice(%p0, %upd, %p1, %p1, %p1)
+  ROOT %t = (bf16[16,4096,7168]{2,1,0}) tuple(%dus)
+}
+"""
+
+BF16_BIG = 16 * 4096 * 7168 * 2        # bytes of bf16[16,4096,7168]
+F32_BIG = 16 * 4096 * 7168 * 4
+F32_SMALL = 16 * 1024 * 4
+UPD = 16 * 1 * 7168 * 2
+
+
+def test_collective_bytes_by_kind():
+    out = collective_bytes(HLO)
+    # ar0 counts bf16 operand; ar1 is PROMOTED -> counted at half (source bf16)
+    assert out["all-reduce"] == BF16_BIG + F32_BIG // 2
+    assert out["all-gather"] == F32_SMALL
+    assert out["all-to-all"] == F32_SMALL
+
+
+def test_dus_overcount():
+    # one DUS: overcount = 2*buffer - update
+    assert dus_overcount(HLO) == 2 * BF16_BIG - UPD
+
+
+def test_top_tensors_ranks_by_bytes():
+    tops = top_tensors(HLO, k=3)
+    assert tops[0][0].startswith("f32[16,4096,7168]")
+    assert tops[0][1] == F32_BIG
+
+
+def test_collective_sites_groups():
+    sites = collective_sites(HLO, k=10)
+    kinds = {s["kind"] for s in sites}
+    assert {"all-reduce", "all-gather", "all-to-all"} <= kinds
+    ar = [s for s in sites if s["kind"] == "all-reduce"]
+    assert sum(s["count"] for s in ar) == 2
