@@ -5,6 +5,8 @@
     the TPU lowering of the same plan, validated in tests)
   * MERGE (Algorithm 2): records/s merged into the online store, including
     the stale-update no-op path (idempotence under retries)
+  * MERGE ENGINES: the per-row loop reference vs the vectorized engine vs
+    the kernels/online_merge Pallas path, same workload, rows/s each
   * staleness metric: the §2.1 freshness SLA readout under a materialization
     cadence
 """
@@ -16,11 +18,53 @@ import time
 import numpy as np
 
 from repro.core.assets import Entity, Feature, FeatureSetSpec, MaterializationSettings
-from repro.core.dsl import DslTransform, RollingAgg
+from repro.core.dsl import DslTransform, RollingAgg, UDFTransform
 from repro.core.featurestore import FeatureStore
+from repro.core.online_store import OnlineStore
+from repro.core.table import Table
 from repro.data.sources import SyntheticEventSource
 
 HOUR = 3_600_000
+
+
+def bench_merge_engines(rows: int = 50_000, batches: int = 5) -> dict:
+    """Online-store Algorithm-2 merge rows/s per write engine (same data,
+    byte-identical end states — parity is covered by tests/core)."""
+    spec = FeatureSetSpec(
+        name="m", version=1, entity=Entity("customer", ("entity_id",)),
+        features=(Feature("f0", "float32"),), source_name="direct",
+        transform=UDFTransform(lambda df, ctx: df, name="id"),
+        timestamp_col="ts",
+        materialization=MaterializationSettings(True, True),
+    )
+    per_batch = rows // batches
+    out = {}
+    for engine in ("loop", "vector", "kernel"):
+        rng = np.random.default_rng(3)
+        store = OnlineStore(merge_engine=engine)
+        frames = [
+            Table({
+                "entity_id": rng.integers(0, 10_000, per_batch).astype(np.int64),
+                "ts": rng.integers(0, 10**6 * (i + 1), per_batch).astype(np.int64),
+                "f0": rng.random(per_batch).astype(np.float32),
+            })
+            for i in range(batches)
+        ]
+        store.merge(spec, frames[0], 10**7)  # warm (jit for the kernel path)
+        t0 = time.perf_counter()
+        for i, f in enumerate(frames):
+            store.merge(spec, f, 10**8 + i)
+        wall = time.perf_counter() - t0
+        out[engine] = {
+            "rows_per_s": int(rows / wall),
+            "wall_s": round(wall, 4),
+            "counters": {
+                "inserts": store.inserts,
+                "overrides": store.overrides,
+                "noops": store.noops,
+            },
+        }
+    return out
 
 
 def _store(entities: int, hours: int = 8) -> FeatureStore:
@@ -88,6 +132,7 @@ def run(entity_counts=(1_000, 10_000), batch=256, rounds=20) -> dict:
             "tick_wall_s": round(merge_s, 3),
             "jobs": stats,
         },
+        "merge_engines": bench_merge_engines(),
         "staleness_ms": stale,
     }
 

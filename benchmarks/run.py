@@ -49,7 +49,8 @@ def main() -> None:
             entity_counts=(1_000,) if args.fast else (1_000, 10_000)
         ),
         "materialization": lambda: bench_materialization.run(
-            hours=6 if args.fast else 16
+            hours=6 if args.fast else 16,
+            merge_window=20_000 if args.fast else 100_000,
         ),
         "geo": bench_geo.run,
         "roofline": lambda: roofline_summary.summarize(),
@@ -73,6 +74,26 @@ def main() -> None:
     out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text(json.dumps(results, indent=1, default=str))
     print(f"\nwrote {out}")
+
+    # Standalone materialization artifact: the merge-path perf trajectory is
+    # tracked PR-over-PR from this file (BENCH_materialization.json at the
+    # repo root).  --fast runs use a different workload (20k window), so they
+    # must not overwrite the tracked full-size numbers.
+    mat = results.get("materialization")
+    if mat and mat.get("ok") and not args.fast:
+        artifact = Path(__file__).resolve().parent.parent / "BENCH_materialization.json"
+        artifact.write_text(
+            json.dumps(
+                {
+                    "merge_engines": mat["result"].get("merge_engines"),
+                    "throughput": mat["result"].get("throughput"),
+                },
+                indent=1,
+                default=str,
+            )
+        )
+        print(f"wrote {artifact}")
+
     failed = [n for n, r in results.items() if not r.get("ok")]
     if failed:
         raise SystemExit(f"benchmark failures: {failed}")

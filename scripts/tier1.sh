@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Tier-1 verify: the ROADMAP gate every PR must keep green.
+#
+#   scripts/tier1.sh              # full suite
+#   scripts/tier1.sh tests/core   # any extra pytest args pass through
+#
+# Wraps the canonical command with PYTHONPATH setup so it works from any
+# checkout without an editable install.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q -p no:cacheprovider "$@"

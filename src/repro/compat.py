@@ -1,0 +1,50 @@
+"""Version-tolerant imports for moving jax APIs.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to the top-level
+``jax`` namespace (and renamed ``check_rep`` to ``check_vma``) across jax
+releases.  Model/optim code writes against the new-style surface
+(``check_vma=...``); this shim adapts to whichever the installed jax ships.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "ad_barrier"]
+
+
+@jax.custom_vjp
+def ad_barrier(x):
+    """``jax.lax.optimization_barrier`` with an explicit AD rule.
+
+    Newer jax differentiates the barrier by barriering the (co)tangents;
+    jax 0.4.37 has no rule at all and raises under ``jax.grad``.  This wrapper
+    reproduces the new-jax behavior everywhere: barrier on the primal, barrier
+    on the cotangent (so e.g. a bf16 boundary stays bf16 in the backward pass).
+    """
+    return jax.lax.optimization_barrier(x)
+
+
+def _ad_barrier_fwd(x):
+    return ad_barrier(x), None
+
+
+def _ad_barrier_bwd(_, ct):
+    return (jax.lax.optimization_barrier(ct),)
+
+
+ad_barrier.defvjp(_ad_barrier_fwd, _ad_barrier_bwd)
+
+try:  # jax >= 0.6 style: top-level export, check_vma kwarg
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+
+    shard_map = _shard_map
+except ImportError:  # older jax: experimental module, check_rep kwarg
+    from jax.experimental.shard_map import shard_map as _exp_shard_map
+
+    def shard_map(f, *, mesh=None, in_specs, out_specs, check_vma=None, **kw):
+        if check_vma is not None and "check_rep" not in kw:
+            kw["check_rep"] = check_vma
+        return _exp_shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+        )

@@ -51,29 +51,36 @@ class ConsistencyReport:
 def check_consistency(
     spec: FeatureSetSpec, offline: OfflineStore, online: OnlineStore
 ) -> ConsistencyReport:
+    """Vectorized sorted-set comparison: ``latest_per_key`` (lexsorted) and
+    ``dump_all`` (index order) are both ascending in ``__key__``, so skew
+    checks are searchsorted alignments, not per-id dict probes."""
     latest = offline.latest_per_key(spec.name, spec.version)
     online_dump = online.dump_all(spec.name, spec.version)
-    on_map = {
-        int(k): (int(ev), int(cr))
-        for k, ev, cr in zip(
-            online_dump["__key__"], online_dump[EVENT_TS], online_dump[CREATION_TS]
-        )
-    }
-    missing_online, stale_online = [], []
-    off_keys = set()
-    for i in range(len(latest)):
-        k = int(latest["__key__"][i])
-        off_keys.add(k)
-        want = (int(latest[EVENT_TS][i]), int(latest[CREATION_TS][i]))
-        got = on_map.get(k)
-        if got is None:
-            missing_online.append(k)
-        elif got != want:
-            stale_online.append(k)
-    missing_offline = [k for k in on_map if k not in off_keys]
-    ok = not (missing_online or stale_online or missing_offline)
+    off_k = (
+        latest["__key__"] if len(latest) else np.empty(0, np.int64)
+    )
+    on_k = (
+        online_dump["__key__"] if len(online_dump) else np.empty(0, np.int64)
+    )
+    missing_online = np.setdiff1d(off_k, on_k, assume_unique=True)
+    missing_offline = np.setdiff1d(on_k, off_k, assume_unique=True)
+    common, off_i, on_i = np.intersect1d(
+        off_k, on_k, assume_unique=True, return_indices=True
+    )
+    stale = (
+        (latest[EVENT_TS][off_i] != online_dump[EVENT_TS][on_i])
+        | (latest[CREATION_TS][off_i] != online_dump[CREATION_TS][on_i])
+        if len(common)
+        else np.zeros(0, bool)
+    )
+    stale_online = common[stale]
+    ok = not (len(missing_online) or len(stale_online) or len(missing_offline))
     return ConsistencyReport(
-        ok, len(off_keys), missing_online, stale_online, missing_offline
+        ok,
+        len(off_k),
+        [int(k) for k in missing_online],
+        [int(k) for k in stale_online],
+        [int(k) for k in missing_offline],
     )
 
 

@@ -52,14 +52,19 @@ class FeatureStore:
         offline_shards: int = 4,
         online_partitions: int = 16,
         interpret: bool = True,
+        merge_engine: str = "vector",
     ) -> None:
         self.name = name
         self._now = 0
         self.clock = clock or (lambda: self._now)
         self.registry = AssetRegistry(name, region, subscription)
-        self.offline = OfflineStore(num_shards=offline_shards)
+        self.offline = OfflineStore(
+            num_shards=offline_shards, merge_engine=merge_engine
+        )
         self.online = OnlineStore(
-            num_partitions=online_partitions, interpret=interpret
+            num_partitions=online_partitions,
+            interpret=interpret,
+            merge_engine=merge_engine,
         )
         self.scheduler = Scheduler()
         self.monitor = HealthMonitor()

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["encode_keys"]
+__all__ = ["encode_keys", "encode_full_keys"]
 
 _C1 = np.uint64(0xBF58476D1CE4E5B9)
 _C2 = np.uint64(0x94D049BB133111EB)
@@ -38,9 +38,59 @@ def encode_keys(columns: list[np.ndarray]) -> np.ndarray:
             if np.issubdtype(col.dtype, np.integer):
                 h = _splitmix64(col.astype(np.int64).view(np.uint64))
             else:
-                h = np.asarray(
-                    [np.uint64(hash(str(v)) & 0x7FFFFFFFFFFFFFFF) for v in col]
-                )
-                h = _splitmix64(h)
+                h = _hash_object_column(col)
             acc = _splitmix64(acc ^ h)
     return (acc >> np.uint64(1)).view(np.int64)  # clear sign bit
+
+
+def encode_full_keys(
+    ids: np.ndarray, event_ts: np.ndarray, creation_ts
+) -> np.ndarray:
+    """Mix the offline store's FULL record key (id, event_ts, creation_ts)
+    into one int64 — the §4.5 idempotence check key.
+
+    Same splitmix64 composition (and the same documented ~2^-64 collision
+    assumption) as composite entity keys above; collapsing the triple to a
+    fixed-width integer is what lets full-key dedup run as a single sorted
+    int64 ``searchsorted`` instead of tuple-set membership.
+    """
+    with np.errstate(over="ignore"):
+        ev = np.asarray(event_ts, np.int64).view(np.uint64)
+        cr = np.asarray(creation_ts, np.int64).view(np.uint64)
+        # two mix rounds: ids and event_ts are decorrelated by the first,
+        # creation_ts (constant per batch) folds into the second — one
+        # fewer full-array pass than mixing each field separately
+        h = _splitmix64(np.asarray(ids, np.int64).view(np.uint64) ^ (ev << np.uint64(1)))
+        h = _splitmix64(h ^ ev ^ cr)
+    # non-negative so signed and unsigned sort orders coincide (radix sort)
+    return (h >> np.uint64(1)).view(np.int64)
+
+
+def _hash_object_column(col: np.ndarray) -> np.ndarray:
+    """Vectorized, process-stable hash of a non-integer id column.
+
+    Values are rendered to a fixed-width unicode array, viewed as a
+    (N, W) codepoint matrix, and folded one splitmix round per character
+    column — O(W) vector ops instead of a per-row Python ``hash(str(v))``
+    (which was also salted per process and therefore unusable for any
+    persisted or cross-process key comparison).
+    """
+    s = col if col.dtype.kind == "U" else col.astype(np.str_)
+    n = len(s)
+    lengths = np.char.str_len(s).astype(np.uint64)
+    width = s.dtype.itemsize // 4  # UCS4 codepoints per cell (array max)
+    with np.errstate(over="ignore"):
+        # Seed with the TRUE per-string length and only fold codepoints
+        # inside it, so a value hashes identically regardless of the fixed
+        # width of the array it happens to arrive in (write/read batches
+        # rarely share a max width).
+        h = _splitmix64(lengths)
+        if width == 0:
+            return h
+        codes = np.ascontiguousarray(s).view(np.uint32).reshape(n, width)
+        for j in range(width):
+            active = j < lengths
+            h = np.where(
+                active, _splitmix64(h ^ codes[:, j].astype(np.uint64)), h
+            )
+    return h

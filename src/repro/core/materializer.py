@@ -73,11 +73,15 @@ class Materializer:
         *,
         clock: Callable[[], int],
         faults: Optional[FaultInjector] = None,
+        merge_engine: Optional[str] = None,
     ) -> None:
         self.offline = offline
         self.online = online
         self.clock = clock
         self.faults = faults or FaultInjector()
+        # None -> each store's own default; "loop"/"vector"/"kernel" forces
+        # one write path end-to-end (benchmarks flip old-style vs engine here)
+        self.merge_engine = merge_engine
         self.outcomes: list[MaterializationOutcome] = []
 
     def run_job(
@@ -96,11 +100,12 @@ class Materializer:
         creation_ts = int(self.clock())
         offline_done = online_done = False
         if spec.materialization.offline_enabled:
-            self.offline.merge(spec, frame, creation_ts)
+            # OfflineStore normalizes "kernel" (online-only) to its vector path
+            self.offline.merge(spec, frame, creation_ts, engine=self.merge_engine)
             offline_done = True
         self.faults.check("between_merges")
         if spec.materialization.online_enabled:
-            self.online.merge(spec, frame, creation_ts)
+            self.online.merge(spec, frame, creation_ts, engine=self.merge_engine)
             online_done = True
         self.faults.check("after_merges")
 

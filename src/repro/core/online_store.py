@@ -12,10 +12,24 @@ Semantics reproduced exactly:
     reclaimed by ``sweep``.
 
 Layout: the paper's storage-partitioning scheme applied to device memory —
-hash-partitioned (P, C) slot tables whose key planes are exactly what the
-kernels/online_lookup Pallas kernel scans, plus (P, C, D) feature values.
-Batched GETs run through the kernel; merges are host-side (writes are the
-materialization path, reads are the latency path).
+hash-partitioned (P, C) slot tables whose key planes are exactly what BOTH
+kernels (kernels/online_lookup for GETs, kernels/online_merge for writes)
+scan, plus (P, C, D) feature values.  Host-side truth lives in the same
+arrays; per-id slot resolution goes through a sorted key index
+(searchsorted), not a Python dict.
+
+Write path — three interchangeable engines, byte-identical end states:
+  * ``vector`` (default): core.merge_engine pre-reduces the batch to one
+    winner per id (lexsort + segment scan), slots resolve in bulk against
+    the sorted index, and inserts/overrides land as numpy scatters.  Exact
+    Algorithm-2 ``inserts/overrides/noops`` tallies come from the same
+    reduction.
+  * ``kernel``: identical host bookkeeping, but the latest-wins
+    compare-and-update runs through the kernels/online_merge Pallas kernel
+    on the device layout (winner records routed per partition).
+  * ``loop``: the retained per-row reference implementation — the
+    sequential Algorithm-2 semantics the vector engines are proven against
+    (parity tests + old-style benchmark baseline).
 """
 
 from __future__ import annotations
@@ -27,9 +41,16 @@ import numpy as np
 
 from repro.core.assets import FeatureSetSpec
 from repro.core.keys import encode_keys
+from repro.core.merge_engine import (
+    INT64_MIN,
+    argsort_ids,
+    merge_sorted,
+    plan_online_batch,
+)
 from repro.core.offline_store import CREATION_TS, EVENT_TS
 from repro.core.table import Table
 from repro.kernels.online_lookup import ops as lookup_ops
+from repro.kernels.online_merge import ops as merge_ops
 
 __all__ = ["OnlineStore"]
 
@@ -43,7 +64,14 @@ class _PartitionedTable:
     creation_ts: np.ndarray  # (P, C) int64
     values: np.ndarray       # (P, C, D) float32
     fill: np.ndarray         # (P,) int64 next free slot per partition
-    slot_of: dict[int, tuple[int, int]]  # id -> (partition, slot)
+    # sorted key index: idx_keys ascending; idx_part/idx_slot parallel
+    idx_keys: np.ndarray     # (K,) int64
+    idx_part: np.ndarray     # (K,) int64
+    idx_slot: np.ndarray     # (K,) int64
+    # loop-engine slot map, maintained incrementally so the reference
+    # baseline pays seed-equivalent O(batch) per merge, not an O(K) rebuild;
+    # invalidated whenever a vector/kernel merge or a sweep touches the table
+    slot_cache: Optional[dict] = None
 
 
 class OnlineStore:
@@ -53,10 +81,14 @@ class OnlineStore:
         initial_capacity: int = 256,
         *,
         interpret: bool = True,
+        merge_engine: str = "vector",
     ):
+        if merge_engine not in ("vector", "kernel", "loop"):
+            raise ValueError(f"unknown merge engine {merge_engine!r}")
         self.num_partitions = num_partitions
         self.initial_capacity = initial_capacity
         self.interpret = interpret
+        self.merge_engine = merge_engine
         self._tables: dict[tuple[str, int], _PartitionedTable] = {}
         self._specs: dict[tuple[str, int], FeatureSetSpec] = {}
         self.inserts = 0
@@ -77,7 +109,9 @@ class OnlineStore:
             creation_ts=np.zeros((p, c), np.int64),
             values=np.zeros((p, c, d), np.float32),
             fill=np.zeros(p, np.int64),
-            slot_of={},
+            idx_keys=np.empty(0, np.int64),
+            idx_part=np.empty(0, np.int64),
+            idx_slot=np.empty(0, np.int64),
         )
         self._specs[key] = spec
 
@@ -86,7 +120,6 @@ class OnlineStore:
 
     def _grow(self, key: tuple[str, int]) -> None:
         t = self._tables[key]
-        p, c = t.keys_lo.shape
         grow = lambda a, fillv: np.concatenate(
             [a, np.full_like(a, fillv)], axis=1
         )
@@ -97,24 +130,184 @@ class OnlineStore:
         t.creation_ts = grow(t.creation_ts, 0)
         t.values = np.concatenate([t.values, np.zeros_like(t.values)], axis=1)
 
-    # -- Algorithm 2, online branch -------------------------------------------
-    def merge(self, spec: FeatureSetSpec, frame: Table, creation_ts: int) -> None:
+    # -- sorted key index ---------------------------------------------------
+    def _index_find(
+        self, t: _PartitionedTable, ids: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """ids (B,) -> (part, slot, found); part/slot are 0 where not found."""
+        k = len(t.idx_keys)
+        pos = np.searchsorted(t.idx_keys, ids)
+        safe = np.minimum(pos, max(k - 1, 0))
+        found = (
+            (pos < k) & (t.idx_keys[safe] == ids)
+            if k
+            else np.zeros(len(ids), bool)
+        )
+        part = np.where(found, t.idx_part[safe] if k else 0, 0)
+        slot = np.where(found, t.idx_slot[safe] if k else 0, 0)
+        return part, slot, found
+
+    def _index_insert(
+        self,
+        t: _PartitionedTable,
+        new_ids: np.ndarray,
+        parts: np.ndarray,
+        slots: np.ndarray,
+    ) -> None:
+        """Bulk-insert (already absent) ids, keeping the index sorted."""
+        order = np.argsort(new_ids)  # unique keys: stability irrelevant
+        t.idx_keys, t.idx_part, t.idx_slot = merge_sorted(
+            [t.idx_keys, t.idx_part, t.idx_slot],
+            [new_ids[order], parts[order], slots[order]],
+        )
+
+    # -- Algorithm 2, online branch -----------------------------------------
+    def merge(
+        self,
+        spec: FeatureSetSpec,
+        frame: Table,
+        creation_ts: int,
+        *,
+        engine: Optional[str] = None,
+    ) -> None:
+        engine = engine or self.merge_engine
+        if engine not in ("vector", "kernel", "loop"):
+            raise ValueError(f"unknown merge engine {engine!r}")
         self.register(spec)
         if len(frame) == 0:
             return
-        t = self._tables[spec.key]
         ids = encode_keys([frame[c] for c in spec.index_columns])
         event_ts = frame[spec.timestamp_col].astype(np.int64)
-        feats = np.stack(
-            [frame[f.name].astype(np.float32) for f in spec.features], axis=1
+        fnames = [f.name for f in spec.features]
+        if engine == "loop":
+            feats = frame.column_stack(fnames, np.float32)
+            self._merge_loop(spec.key, ids, event_ts, feats, creation_ts)
+        else:
+            self._merge_vector(
+                spec.key, ids, event_ts, frame, fnames, creation_ts,
+                use_kernel=(engine == "kernel"),
+            )
+
+    def _merge_vector(
+        self,
+        key: tuple[str, int],
+        ids: np.ndarray,
+        event_ts: np.ndarray,
+        frame: Table,
+        fnames: list[str],
+        creation_ts: int,
+        *,
+        use_kernel: bool = False,
+    ) -> None:
+        t = self._tables[key]
+        t.slot_cache = None
+
+        def resolve(uids: np.ndarray):
+            part_e, slot_e, found = self._index_find(t, uids)
+            resolve.parts, resolve.slots = part_e, slot_e
+            return t.event_ts[part_e, slot_e], t.creation_ts[part_e, slot_e], found
+
+        plan = plan_online_batch(ids, event_ts, creation_ts, resolve)
+        part_e, slot_e = resolve.parts, resolve.slots
+        found = ~plan.is_new
+        # only winner rows' features ever reach the store — gather those,
+        # not the whole batch
+        wfeats = np.stack(
+            [np.asarray(frame[n], np.float32)[plan.winner_row] for n in fnames],
+            axis=1,
         )
+        self.inserts += plan.inserts
+        self.overrides += plan.overrides
+        self.noops += plan.noops
+
+        g = len(plan.uids)
+        gpart = np.empty(g, np.int64)
+        gslot = np.empty(g, np.int64)
+        gpart[found] = part_e[found]
+        gslot[found] = slot_e[found]
+
+        new = plan.is_new
+        if new.any():
+            # slots assigned in ARRIVAL order of each id's first occurrence
+            # (identical to the sequential loop's fill-counter behavior)
+            ins_ids = plan.uids[new]
+            arrival = np.argsort(plan.first_row[new], kind="stable")
+            ins_ids_o = ins_ids[arrival]
+            parts_o = lookup_ops.partition_of(ins_ids_o, self.num_partitions)
+            counts = np.bincount(parts_o, minlength=self.num_partitions)
+            while (t.fill + counts).max() > t.keys_lo.shape[1]:
+                self._grow(key)
+            po = np.argsort(parts_o, kind="stable")
+            parts_sorted = parts_o[po]
+            rank = np.arange(len(po)) - np.searchsorted(parts_sorted, parts_sorted)
+            slots_o = np.empty(len(po), np.int64)
+            slots_o[po] = t.fill[parts_sorted] + rank
+            t.fill += counts
+
+            lo, hi = lookup_ops.split_i64(ins_ids_o)
+            t.keys_lo[parts_o, slots_o] = lo
+            t.keys_hi[parts_o, slots_o] = hi
+            t.keys_full[parts_o, slots_o] = ins_ids_o
+            self._index_insert(t, ins_ids_o, parts_o, slots_o)
+            # map arrival-ordered placements back to unique-id (group) order
+            gpart_new = np.empty(len(po), np.int64)
+            gslot_new = np.empty(len(po), np.int64)
+            gpart_new[arrival] = parts_o
+            gslot_new[arrival] = slots_o
+            gpart[new] = gpart_new
+            gslot[new] = gslot_new
+            if use_kernel:
+                # fresh slots start at the minimum timestamp so any real
+                # record wins the device-side compare-and-update
+                t.event_ts[parts_o, slots_o] = INT64_MIN
+                t.creation_ts[parts_o, slots_o] = INT64_MIN
+
+        if use_kernel:
+            t.event_ts, t.creation_ts, t.values = merge_ops.route_and_merge(
+                t.keys_lo, t.keys_hi, t.event_ts, t.creation_ts, t.values,
+                plan.uids, plan.winner_ev, wfeats,
+                creation_ts, interpret=self.interpret,
+            )
+        else:
+            upd = plan.beat
+            p_u, s_u = gpart[upd], gslot[upd]
+            t.event_ts[p_u, s_u] = plan.winner_ev[upd]
+            t.creation_ts[p_u, s_u] = creation_ts
+            t.values[p_u, s_u] = wfeats[upd]
+
+    def _merge_loop(
+        self,
+        key: tuple[str, int],
+        ids: np.ndarray,
+        event_ts: np.ndarray,
+        feats: np.ndarray,
+        creation_ts: int,
+    ) -> None:
+        """Retained reference: the per-row sequential Algorithm-2 loop.
+
+        Decision semantics are the original row-at-a-time implementation.
+        The slot map is cached on the table and maintained incrementally
+        (like the seed's persistent dict) so this baseline costs O(batch)
+        per merge; only batch-new ids are merged into the sorted index
+        afterwards, so end state is byte-identical to the vector engine's."""
+        t = self._tables[key]
+        slot_of = t.slot_cache
+        if slot_of is None:
+            slot_of = {
+                int(k): (int(p), int(s))
+                for k, p, s in zip(t.idx_keys, t.idx_part, t.idx_slot)
+            }
+            t.slot_cache = slot_of
+        new_ids: list[int] = []
+        new_parts: list[int] = []
+        new_slots: list[int] = []
         parts = lookup_ops.partition_of(ids, self.num_partitions)
         for i in range(len(ids)):
             key_i, ev_i, p = int(ids[i]), int(event_ts[i]), int(parts[i])
-            existing = t.slot_of.get(key_i)
+            existing = slot_of.get(key_i)
             if existing is None:
                 if t.fill[p] >= t.keys_lo.shape[1]:
-                    self._grow(spec.key)
+                    self._grow(key)
                 slot = int(t.fill[p])
                 lo, hi = lookup_ops.split_i64(np.asarray([key_i]))
                 t.keys_lo[p, slot] = lo[0]
@@ -123,7 +316,10 @@ class OnlineStore:
                 t.event_ts[p, slot] = ev_i
                 t.creation_ts[p, slot] = creation_ts
                 t.values[p, slot] = feats[i]
-                t.slot_of[key_i] = (p, slot)
+                slot_of[key_i] = (p, slot)
+                new_ids.append(key_i)
+                new_parts.append(p)
+                new_slots.append(slot)
                 t.fill[p] += 1
                 self.inserts += 1
             else:
@@ -137,6 +333,13 @@ class OnlineStore:
                     self.overrides += 1
                 else:
                     self.noops += 1
+        if new_ids:
+            self._index_insert(
+                t,
+                np.asarray(new_ids, np.int64),
+                np.asarray(new_parts, np.int64),
+                np.asarray(new_slots, np.int64),
+            )
 
     # -- reads ----------------------------------------------------------------
     def lookup(
@@ -157,31 +360,22 @@ class OnlineStore:
             vals, found = lookup_ops.route_and_lookup(
                 t.keys_lo, t.keys_hi, t.values, ids, interpret=self.interpret
             )
-            # TTL + record metadata need the slot: recompute host-side mask.
             if now is not None and spec.materialization.online_ttl is not None:
                 ttl = spec.materialization.online_ttl
-                for i, k in enumerate(ids):
-                    s = t.slot_of.get(int(k))
-                    if s is not None and now - int(t.creation_ts[s[0], s[1]]) > ttl:
-                        found[i] = False
-                        vals[i] = 0.0
+                p, s, hit = self._index_find(t, ids)
+                expired = hit & (now - t.creation_ts[p, s] > ttl)
+                found[expired] = False
+                vals[expired] = 0.0
             return vals, found
         d = t.values.shape[-1]
         vals = np.zeros((len(ids), d), np.float32)
         found = np.zeros(len(ids), bool)
         ttl = spec.materialization.online_ttl
-        for i, k in enumerate(ids):
-            s = t.slot_of.get(int(k))
-            if s is None:
-                continue
-            if (
-                now is not None
-                and ttl is not None
-                and now - int(t.creation_ts[s[0], s[1]]) > ttl
-            ):
-                continue
-            vals[i] = t.values[s[0], s[1]]
-            found[i] = True
+        p, s, hit = self._index_find(t, ids)
+        if now is not None and ttl is not None:
+            hit = hit & ~(now - t.creation_ts[p, s] > ttl)
+        found[hit] = True
+        vals[hit] = t.values[p[hit], s[hit]]
         return vals, found
 
     def get_record(
@@ -189,44 +383,38 @@ class OnlineStore:
     ) -> list[Optional[dict]]:
         """Full records (event/creation ts + features) — used by tests and
         the online→offline bootstrap."""
-        spec = self._specs[(name, version)]
         t = self._tables[(name, version)]
         ids = encode_keys(id_columns)
+        p, s, hit = self._index_find(t, ids)
         out: list[Optional[dict]] = []
-        for k in ids:
-            s = t.slot_of.get(int(k))
-            if s is None:
+        for i, k in enumerate(ids):
+            if not hit[i]:
                 out.append(None)
                 continue
-            p, slot = s
             out.append(
                 {
                     "key": int(k),
-                    EVENT_TS: int(t.event_ts[p, slot]),
-                    CREATION_TS: int(t.creation_ts[p, slot]),
-                    "features": t.values[p, slot].copy(),
+                    EVENT_TS: int(t.event_ts[p[i], s[i]]),
+                    CREATION_TS: int(t.creation_ts[p[i], s[i]]),
+                    "features": t.values[p[i], s[i]].copy(),
                 }
             )
         return out
 
     def dump_all(self, name: str, version: int) -> Table:
-        """Everything currently live — the §4.5.5 online→offline bootstrap."""
+        """Everything currently live — the §4.5.5 online→offline bootstrap.
+        The sorted key index IS the dump order (ascending id)."""
         spec = self._specs[(name, version)]
         t = self._tables[(name, version)]
-        rows_k, rows_ev, rows_cr, rows_v = [], [], [], []
-        for k, (p, slot) in sorted(t.slot_of.items()):
-            rows_k.append(k)
-            rows_ev.append(int(t.event_ts[p, slot]))
-            rows_cr.append(int(t.creation_ts[p, slot]))
-            rows_v.append(t.values[p, slot])
+        p, s = t.idx_part, t.idx_slot
         cols: dict[str, np.ndarray] = {
-            "__key__": np.asarray(rows_k, np.int64).reshape(-1),
-            EVENT_TS: np.asarray(rows_ev, np.int64).reshape(-1),
-            CREATION_TS: np.asarray(rows_cr, np.int64).reshape(-1),
+            "__key__": t.idx_keys.copy(),
+            EVENT_TS: t.event_ts[p, s],
+            CREATION_TS: t.creation_ts[p, s],
         }
         vals = (
-            np.stack(rows_v, axis=0)
-            if rows_v
+            t.values[p, s]
+            if len(p)
             else np.zeros((0, len(spec.features)), np.float32)
         )
         for j, f in enumerate(spec.features):
@@ -234,7 +422,7 @@ class OnlineStore:
         return Table(cols)
 
     def num_records(self, name: str, version: int) -> int:
-        return len(self._tables[(name, version)].slot_of)
+        return len(self._tables[(name, version)].idx_keys)
 
     def sweep(self, name: str, version: int, now: int) -> int:
         """Reclaim TTL-expired slots (compaction). Returns #evicted."""
@@ -243,17 +431,18 @@ class OnlineStore:
         if ttl is None:
             return 0
         t = self._tables[(name, version)]
-        evict = [
-            k
-            for k, (p, s) in t.slot_of.items()
-            if now - int(t.creation_ts[p, s]) > ttl
-        ]
-        for k in evict:
-            p, s = t.slot_of.pop(k)
-            t.keys_lo[p, s] = -1
-            t.keys_hi[p, s] = -1
-            t.keys_full[p, s] = -1
-        return len(evict)
+        expired = now - t.creation_ts[t.idx_part, t.idx_slot] > ttl
+        if not expired.any():
+            return 0
+        t.slot_cache = None
+        p, s = t.idx_part[expired], t.idx_slot[expired]
+        t.keys_lo[p, s] = -1
+        t.keys_hi[p, s] = -1
+        t.keys_full[p, s] = -1
+        t.idx_keys = t.idx_keys[~expired]
+        t.idx_part = t.idx_part[~expired]
+        t.idx_slot = t.idx_slot[~expired]
+        return int(expired.sum())
 
     # device mirror accessors for benchmarks
     def device_tables(self, name: str, version: int):

@@ -102,6 +102,19 @@ class Table:
     def map_column(self, name: str, fn: Callable[[np.ndarray], np.ndarray]) -> "Table":
         return self.with_column(name, fn(self.columns[name]))
 
+    def column_stack(
+        self, names: Sequence[str], dtype: np.dtype = np.float32
+    ) -> np.ndarray:
+        """(N, len(names)) matrix of the named columns — the store-facing
+        feature plane (one row per record, one column per feature)."""
+        if not names:
+            return np.zeros((len(self), 0), dtype)
+        # np.stack copies anyway; asarray avoids a second copy per column
+        # when the dtype already matches
+        return np.stack(
+            [np.asarray(self.columns[n], dtype) for n in names], axis=1
+        )
+
     def copy(self) -> "Table":
         return Table({k: v.copy() for k, v in self.columns.items()})
 

@@ -20,7 +20,14 @@ import numpy as np
 
 from repro.kernels.online_lookup.kernel import lookup_kernel_call
 
-__all__ = ["split_i64", "partition_of", "lookup", "route_and_lookup"]
+__all__ = [
+    "split_i64",
+    "combine_i64",
+    "partition_of",
+    "lookup",
+    "route_and_lookup",
+    "route_flat",
+]
 
 _LANE = 128
 _MIX = np.uint64(0x9E3779B97F4A7C15)
@@ -34,15 +41,57 @@ def split_i64(ids: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
     return lo, hi
 
 
+def combine_i64(lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
+    """(lo, hi) int32 planes -> int64 (inverse of ``split_i64``)."""
+    u = np.asarray(lo).view(np.uint32).astype(np.uint64) | (
+        np.asarray(hi).view(np.uint32).astype(np.uint64) << np.uint64(32)
+    )
+    return u.view(np.int64)
+
+
 def partition_of(ids: np.ndarray, num_partitions: int) -> np.ndarray:
     """Fibonacci-hash partition routing (identical for store + queries)."""
     u = np.asarray(ids, dtype=np.int64).view(np.uint64)
     mixed = (u * _MIX) >> np.uint64(33)
+    if num_partitions & (num_partitions - 1) == 0:
+        # power-of-two partition counts (the default) take the cheap mask;
+        # uint64 modulo costs ~2.5ms per 100k keys on its own
+        return (mixed & np.uint64(num_partitions - 1)).view(np.int64)
     return (mixed % np.uint64(num_partitions)).astype(np.int64)
 
 
 def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
+
+
+def route_flat(
+    num_partitions: int, ids: np.ndarray, *payloads: np.ndarray
+) -> tuple[np.ndarray, ...]:
+    """Vectorized flat->routed scatter shared by the lookup and merge paths.
+
+    ids (B,) -> (routed_ids (P, Qmax) int64 with -2 padding, part (B,),
+    pos (B,) [each row's slot within its partition], *routed payloads
+    (P, Qmax, ...) zero-padded).
+    """
+    b = len(ids)
+    part = partition_of(ids, num_partitions)
+    counts = np.bincount(part, minlength=num_partitions)
+    q_max = max(int(counts.max()) if b else 0, 1)
+    order = np.argsort(part, kind="stable")
+    ps = part[order]
+    # rank of each row within its partition's contiguous block
+    pos_sorted = np.arange(b) - np.searchsorted(ps, ps)
+    pos = np.empty(b, np.int64)
+    pos[order] = pos_sorted
+    routed_ids = np.full((num_partitions, q_max), -2, np.int64)
+    routed_ids[part, pos] = ids
+    out = [routed_ids, part, pos]
+    for payload in payloads:
+        shape = (num_partitions, q_max) + payload.shape[1:]
+        r = np.zeros(shape, payload.dtype)
+        r[part, pos] = payload
+        out.append(r)
+    return tuple(out)
 
 
 @functools.partial(jax.jit, static_argnames=("slot_block", "interpret"))
@@ -95,22 +144,11 @@ def route_and_lookup(
     b = len(ids)
     if b == 0:
         return np.zeros((0, values.shape[-1]), np.float32), np.zeros((0,), bool)
-    part = partition_of(ids, num_p)
-    order = np.argsort(part, kind="stable")
-    counts = np.bincount(part, minlength=num_p)
-    q_max = max(int(counts.max()), 1)
-
-    q_lo = np.full((num_p, q_max), -2, np.int32)
-    q_hi = np.full((num_p, q_max), -2, np.int32)
-    pos = np.zeros(num_p, np.int64)
-    lo_all, hi_all = split_i64(ids)
-    slot_in_part = np.zeros(b, np.int64)
-    for j in order:
-        p = part[j]
-        q_lo[p, pos[p]] = lo_all[j]
-        q_hi[p, pos[p]] = hi_all[j]
-        slot_in_part[j] = pos[p]
-        pos[p] += 1
+    routed_ids, part, slot_in_part = route_flat(num_p, ids)
+    q_lo, q_hi = split_i64(routed_ids)
+    pad = routed_ids == -2
+    q_lo[pad] = -2
+    q_hi[pad] = -2
 
     slots = np.asarray(
         lookup(

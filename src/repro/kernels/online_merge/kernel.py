@@ -1,0 +1,146 @@
+"""Pallas TPU kernel: online-store latest-wins MERGE (Algorithm 2, §4.5).
+
+Sibling of kernels/online_lookup: same hash-partitioned (P, C) slot layout,
+same int64-as-two-int32-plane key codec, so the write path and the read path
+share one device-resident table.  Where the lookup kernel answers "which slot
+holds this key", the merge kernel answers "which slots must this batch
+rewrite" — a broadcast compare-match followed by a masked compare-and-update:
+
+  win[c, q] = key_match(c, q) AND (q.event_ts, q.creation_ts) >lex (slot c)
+
+Each partition's routed batch is pre-reduced to ONE winner record per id
+(ops/store responsibility), so at most one query wins any slot and the
+update is a one-hot gather: timestamps via an integer masked sum, feature
+rows via a 0/1 matmul against the (Q, D) routed values (MXU-friendly, exact
+because each output row has exactly one contributing term).
+
+Timestamps are int64 split into (lo, hi) int32 planes like keys; lexicographic
+compare is signed on the hi plane, unsigned (sign-bit-flipped) on the lo
+plane.  Inserted slots are pre-stamped with INT64_MIN timestamps host-side so
+any real record wins them.
+
+Grid: (partition, slot-block); queries + routed values stay resident per
+partition while slot blocks stream through.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["merge_kernel_call"]
+
+def _u32_gt(a, b):
+    """Unsigned > on int32 bit patterns (flip sign bit, compare signed)."""
+    sign = jnp.asarray(-(2**31), dtype=jnp.int32)
+    return (a ^ sign) > (b ^ sign)
+
+
+def _i64_gt(ahi, alo, bhi, blo):
+    """(ahi, alo) > (bhi, blo) as int64: signed hi, unsigned lo."""
+    return (ahi > bhi) | ((ahi == bhi) & _u32_gt(alo, blo))
+
+
+def _merge_kernel(
+    qlo_ref, qhi_ref, qelo_ref, qehi_ref, qv_ref, cr_ref,
+    klo_ref, khi_ref, elo_ref, ehi_ref, clo_ref, chi_ref, v_ref,
+    out_elo, out_ehi, out_clo, out_chi, out_v,
+):
+    qlo = qlo_ref[...]          # (1, Q)
+    qhi = qhi_ref[...]
+    qelo = qelo_ref[...]
+    qehi = qehi_ref[...]
+    klo = klo_ref[...].T        # (Cb, 1)
+    khi = khi_ref[...].T
+    elo = elo_ref[...].T
+    ehi = ehi_ref[...].T
+    clo = clo_ref[...].T
+    chi = chi_ref[...].T
+    crlo = cr_ref[0]            # scalars: batch creation_ts planes
+    crhi = cr_ref[1]
+
+    match = (klo == qlo) & (khi == qhi)                     # (Cb, Q)
+    ev_gt = _i64_gt(qehi, qelo, ehi, elo)
+    ev_eq = (qehi == ehi) & (qelo == elo)
+    cr_gt = _i64_gt(crhi, crlo, chi, clo)                   # (Cb, 1)
+    win = match & (ev_gt | (ev_eq & cr_gt))                 # (Cb, Q)
+
+    any_win = win.any(axis=1, keepdims=True)                # (Cb, 1)
+    wi = win.astype(jnp.int32)
+    sel = lambda q: (wi * q).sum(axis=1, keepdims=True)     # one-hot gather
+
+    out_elo[...] = jnp.where(any_win, sel(qelo), elo).T
+    out_ehi[...] = jnp.where(any_win, sel(qehi), ehi).T
+    out_clo[...] = jnp.where(any_win, crlo, clo).T
+    out_chi[...] = jnp.where(any_win, crhi, chi).T
+
+    qv = qv_ref[0]                                          # (Q, D)
+    upd = jax.lax.dot_general(
+        win.astype(jnp.float32), qv,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        precision=jax.lax.Precision.HIGHEST,
+    )                                                       # (Cb, D) exact
+    out_v[0] = jnp.where(any_win, upd, v_ref[0])
+
+
+@functools.partial(jax.jit, static_argnames=("slot_block", "interpret"))
+def merge_kernel_call(
+    keys_lo: jnp.ndarray,
+    keys_hi: jnp.ndarray,
+    ev_lo: jnp.ndarray,
+    ev_hi: jnp.ndarray,
+    cr_lo: jnp.ndarray,
+    cr_hi: jnp.ndarray,
+    values: jnp.ndarray,
+    q_lo: jnp.ndarray,
+    q_hi: jnp.ndarray,
+    q_ev_lo: jnp.ndarray,
+    q_ev_hi: jnp.ndarray,
+    q_values: jnp.ndarray,
+    creation_planes: jnp.ndarray,
+    *,
+    slot_block: int = 512,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, ...]:
+    """Table planes (P, C) int32 + values (P, C, D) f32, routed winner
+    queries (P, Q) int32 + values (P, Q, D), creation_planes (2,) int32
+    [lo, hi] -> updated (ev_lo, ev_hi, cr_lo, cr_hi, values).
+
+    C % slot_block == 0 and lane-padded Q/D are ops.py's responsibility;
+    at most one query per partition may carry any given key.
+    """
+    p, c = keys_lo.shape
+    _, q = q_lo.shape
+    d = values.shape[-1]
+    if c % slot_block:
+        raise ValueError("C must be a multiple of slot_block")
+    grid = (p, c // slot_block)
+    tab = lambda: pl.BlockSpec((1, slot_block), lambda pb, cb: (pb, cb))
+    qspec = lambda: pl.BlockSpec((1, q), lambda pb, cb: (pb, 0))
+    out_shapes = (
+        [jax.ShapeDtypeStruct((p, c), jnp.int32)] * 4
+        + [jax.ShapeDtypeStruct((p, c, d), jnp.float32)]
+    )
+    return pl.pallas_call(
+        _merge_kernel,
+        grid=grid,
+        in_specs=[
+            qspec(), qspec(), qspec(), qspec(),
+            pl.BlockSpec((1, q, d), lambda pb, cb: (pb, 0, 0)),
+            pl.BlockSpec((2,), lambda pb, cb: (0,)),
+            tab(), tab(), tab(), tab(), tab(), tab(),
+            pl.BlockSpec((1, slot_block, d), lambda pb, cb: (pb, cb, 0)),
+        ],
+        out_specs=[
+            tab(), tab(), tab(), tab(),
+            pl.BlockSpec((1, slot_block, d), lambda pb, cb: (pb, cb, 0)),
+        ],
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(
+        q_lo, q_hi, q_ev_lo, q_ev_hi, q_values, creation_planes,
+        keys_lo, keys_hi, ev_lo, ev_hi, cr_lo, cr_hi, values,
+    )

@@ -1,0 +1,161 @@
+"""jit'd wrapper + host routing for the online-merge kernel.
+
+Mirror of kernels/online_lookup/ops.py on the write side: route a flat,
+per-id-winner batch to hash partitions (fully vectorized scatter — this IS
+the throughput path), pad to lane shapes, split int64 ids/timestamps into
+int32 planes, run the kernel, and recombine the updated planes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.online_lookup.ops import (
+    combine_i64,
+    route_flat,
+    split_i64,
+)
+from repro.kernels.online_merge.kernel import merge_kernel_call
+
+__all__ = ["merge", "route_and_merge", "route_flat"]
+
+_LANE = 128
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("slot_block", "interpret"))
+def merge(
+    keys_lo: jnp.ndarray,
+    keys_hi: jnp.ndarray,
+    ev_lo: jnp.ndarray,
+    ev_hi: jnp.ndarray,
+    cr_lo: jnp.ndarray,
+    cr_hi: jnp.ndarray,
+    values: jnp.ndarray,
+    q_lo: jnp.ndarray,
+    q_hi: jnp.ndarray,
+    q_ev_lo: jnp.ndarray,
+    q_ev_hi: jnp.ndarray,
+    q_values: jnp.ndarray,
+    creation_planes: jnp.ndarray,
+    *,
+    slot_block: int = 512,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, ...]:
+    """Pre-routed merge.  Table planes (P, C) (+ values (P, C, D)), routed
+    queries (P, Q) (+ values (P, Q, D)) -> updated ev/cr planes + values.
+    Handles slot-block/lane padding; at most one query per key."""
+    p, c = keys_lo.shape
+    d = values.shape[-1]
+    c_pad = _round_up(c, min(slot_block, _round_up(c, _LANE)))
+    sb = min(slot_block, c_pad)
+    c_pad = _round_up(c_pad, sb)
+    if c_pad != c:
+        padk = jnp.full((p, c_pad - c), -1, jnp.int32)
+        pad0 = jnp.zeros((p, c_pad - c), jnp.int32)
+        keys_lo = jnp.concatenate([keys_lo, padk], axis=1)
+        keys_hi = jnp.concatenate([keys_hi, padk], axis=1)
+        ev_lo = jnp.concatenate([ev_lo, pad0], axis=1)
+        ev_hi = jnp.concatenate([ev_hi, pad0], axis=1)
+        cr_lo = jnp.concatenate([cr_lo, pad0], axis=1)
+        cr_hi = jnp.concatenate([cr_hi, pad0], axis=1)
+        values = jnp.concatenate(
+            [values, jnp.zeros((p, c_pad - c, d), jnp.float32)], axis=1
+        )
+    q = q_lo.shape[1]
+    q_pad = _round_up(q, _LANE)
+    if q_pad != q:
+        # (-2, -2) padding: matches neither live keys nor the empty sentinel
+        padq = jnp.full((p, q_pad - q), -2, jnp.int32)
+        pad0q = jnp.zeros((p, q_pad - q), jnp.int32)
+        q_lo = jnp.concatenate([q_lo, padq], axis=1)
+        q_hi = jnp.concatenate([q_hi, padq], axis=1)
+        q_ev_lo = jnp.concatenate([q_ev_lo, pad0q], axis=1)
+        q_ev_hi = jnp.concatenate([q_ev_hi, pad0q], axis=1)
+        q_values = jnp.concatenate(
+            [q_values, jnp.zeros((p, q_pad - q, d), jnp.float32)], axis=1
+        )
+    d_pad = _round_up(d, _LANE) if not interpret else d
+    if d_pad != d:
+        values = jnp.concatenate(
+            [values, jnp.zeros((p, c_pad, d_pad - d), jnp.float32)], axis=2
+        )
+        q_values = jnp.concatenate(
+            [q_values, jnp.zeros((p, q_pad, d_pad - d), jnp.float32)], axis=2
+        )
+    out = merge_kernel_call(
+        keys_lo, keys_hi, ev_lo, ev_hi, cr_lo, cr_hi, values,
+        q_lo, q_hi, q_ev_lo, q_ev_hi, q_values, creation_planes,
+        slot_block=sb, interpret=interpret,
+    )
+    ev_lo_u, ev_hi_u, cr_lo_u, cr_hi_u, vals_u = out
+    return (
+        ev_lo_u[:, :c],
+        ev_hi_u[:, :c],
+        cr_lo_u[:, :c],
+        cr_hi_u[:, :c],
+        vals_u[:, :c, :d],
+    )
+
+
+def route_and_merge(
+    keys_lo: np.ndarray,
+    keys_hi: np.ndarray,
+    event_ts: np.ndarray,
+    creation_ts: np.ndarray,
+    values: np.ndarray,
+    ids: np.ndarray,
+    ev: np.ndarray,
+    vals: np.ndarray,
+    batch_creation_ts: int,
+    *,
+    interpret: bool = True,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Flat merge path: winner records ids (B,) int64 (UNIQUE), ev (B,) int64,
+    vals (B, D) f32 against table planes (P, C) + int64 ts + values (P, C, D).
+
+    Returns updated host-side (event_ts, creation_ts, values) as int64/f32.
+    """
+    num_p, _ = keys_lo.shape
+    ids = np.asarray(ids, np.int64)
+    if len(ids) == 0:
+        return event_ts.copy(), creation_ts.copy(), values.copy()
+    q_ids, _, _, q_ev, q_vals = route_flat(
+        num_p, ids, np.asarray(ev, np.int64), np.asarray(vals, np.float32)
+    )
+    q_lo, q_hi = split_i64(q_ids)
+    # padding slots carry ids == -2 on BOTH planes (split of -2 is
+    # (-2, -1)); overwrite the planes where the id is the pad sentinel so
+    # they can never alias a live key's planes.
+    pad = q_ids == -2
+    q_lo[pad] = -2
+    q_hi[pad] = -2
+    q_ev_lo, q_ev_hi = split_i64(q_ev)
+    ev_lo, ev_hi = split_i64(event_ts)
+    cr_lo, cr_hi = split_i64(creation_ts)
+    cr_planes = np.asarray(
+        np.concatenate(split_i64(np.asarray([batch_creation_ts]))), np.int32
+    )
+    out = merge(
+        jnp.asarray(keys_lo), jnp.asarray(keys_hi),
+        jnp.asarray(ev_lo), jnp.asarray(ev_hi),
+        jnp.asarray(cr_lo), jnp.asarray(cr_hi),
+        jnp.asarray(values),
+        jnp.asarray(q_lo), jnp.asarray(q_hi),
+        jnp.asarray(q_ev_lo), jnp.asarray(q_ev_hi),
+        jnp.asarray(q_vals), jnp.asarray(cr_planes),
+        interpret=interpret,
+    )
+    ev_lo_u, ev_hi_u, cr_lo_u, cr_hi_u, vals_u = (np.asarray(o) for o in out)
+    return (
+        combine_i64(ev_lo_u, ev_hi_u),
+        combine_i64(cr_lo_u, cr_hi_u),
+        vals_u,
+    )

@@ -49,7 +49,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+
+from repro.compat import shard_map
 
 from repro.models.config import ModelConfig
 from repro.models.layers import dense_init

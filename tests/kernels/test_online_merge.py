@@ -1,0 +1,194 @@
+"""online_merge kernel vs oracle: latest-wins update, routing, padding."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.online_lookup.ops import combine_i64, partition_of, split_i64
+from repro.kernels.online_merge.ops import merge, route_and_merge, route_flat
+from repro.kernels.online_merge.ref import merge_ref
+
+
+def _build_table(rng, num_p, cap, n_live, dim=3):
+    """Random live table in the shared partitioned layout."""
+    ids = rng.choice(np.arange(1, 10_000_000), size=n_live, replace=False).astype(
+        np.int64
+    )
+    keys = np.full((num_p, cap), -1, np.int64)
+    ev = np.zeros((num_p, cap), np.int64)
+    cr = np.zeros((num_p, cap), np.int64)
+    vals = np.zeros((num_p, cap, dim), np.float32)
+    part = partition_of(ids, num_p)
+    fill = np.zeros(num_p, np.int64)
+    kept = []
+    for j in range(n_live):
+        p = part[j]
+        if fill[p] >= cap:
+            continue
+        keys[p, fill[p]] = ids[j]
+        ev[p, fill[p]] = rng.integers(0, 1000)
+        cr[p, fill[p]] = rng.integers(1000, 2000)
+        vals[p, fill[p]] = float(ids[j] % 89)
+        fill[p] += 1
+        kept.append(ids[j])
+    return keys, ev, cr, vals, np.array(kept, np.int64)
+
+
+def _planes(keys):
+    lo, hi = split_i64(keys)
+    return lo, hi
+
+
+def _run_kernel(keys, ev, cr, vals, q_ids, q_ev, q_vals, batch_cr):
+    klo, khi = _planes(keys)
+    elo, ehi = split_i64(ev)
+    clo, chi = split_i64(cr)
+    qlo, qhi = split_i64(q_ids)
+    pad = q_ids == -2
+    qlo[pad] = -2
+    qhi[pad] = -2
+    qelo, qehi = split_i64(q_ev)
+    cr_planes = np.asarray(
+        np.concatenate(split_i64(np.asarray([batch_cr]))), np.int32
+    )
+    out = merge(
+        jnp.asarray(klo), jnp.asarray(khi),
+        jnp.asarray(elo), jnp.asarray(ehi),
+        jnp.asarray(clo), jnp.asarray(chi),
+        jnp.asarray(vals),
+        jnp.asarray(qlo), jnp.asarray(qhi),
+        jnp.asarray(qelo), jnp.asarray(qehi),
+        jnp.asarray(q_vals), jnp.asarray(cr_planes),
+    )
+    ev_u = combine_i64(np.asarray(out[0]), np.asarray(out[1]))
+    cr_u = combine_i64(np.asarray(out[2]), np.asarray(out[3]))
+    return ev_u, cr_u, np.asarray(out[4])
+
+
+@pytest.mark.parametrize("num_p,cap,q", [(1, 64, 16), (4, 512, 100), (8, 100, 7)])
+def test_merge_vs_ref(num_p, cap, q):
+    rng = np.random.default_rng(num_p * cap + q)
+    keys, ev, cr, vals, live = _build_table(rng, num_p, cap, num_p * cap // 2)
+    # routed queries: mix of hits (latest and stale) and misses, unique ids
+    # per partition row
+    n_pick = min(q * num_p, len(live))
+    picked = rng.choice(live, size=n_pick, replace=False)
+    q_ids = np.full((num_p, q), -2, np.int64)
+    q_ev = np.zeros((num_p, q), np.int64)
+    q_vals = np.zeros((num_p, q, vals.shape[-1]), np.float32)
+    part = partition_of(picked, num_p)
+    pos = np.zeros(num_p, np.int64)
+    for j, pid in enumerate(picked):
+        p = part[j]
+        if pos[p] >= q:
+            continue
+        q_ids[p, pos[p]] = pid
+        q_ev[p, pos[p]] = rng.integers(0, 2000)  # half stale, half newer
+        q_vals[p, pos[p]] = float(pid % 31)
+        pos[p] += 1
+    batch_cr = int(rng.integers(500, 2500))
+    got = _run_kernel(keys, ev, cr, vals, q_ids, q_ev, q_vals, batch_cr)
+    want = merge_ref(keys, ev, cr, vals, q_ids, q_ev, q_vals, batch_cr)
+    for g, w, name in zip(got, want, ("event_ts", "creation_ts", "values")):
+        np.testing.assert_array_equal(g, w, err_msg=name)
+
+
+@pytest.mark.parametrize("slot_block", [128, 256, 1024])
+def test_merge_slot_block_sweep(slot_block):
+    rng = np.random.default_rng(slot_block)
+    keys, ev, cr, vals, live = _build_table(rng, 2, 512, 400)
+    q = 32
+    q_ids = np.full((2, q), -2, np.int64)
+    q_ev = np.zeros((2, q), np.int64)
+    q_vals = np.zeros((2, q, 3), np.float32)
+    part = partition_of(live, 2)
+    for p in range(2):
+        mine = live[part == p][:q]
+        q_ids[p, : len(mine)] = mine
+        q_ev[p, : len(mine)] = 5000  # all win
+        q_vals[p, : len(mine)] = 7.0
+    klo, khi = split_i64(keys)
+    elo, ehi = split_i64(ev)
+    clo, chi = split_i64(cr)
+    qlo, qhi = split_i64(q_ids)
+    qlo[q_ids == -2] = -2
+    qhi[q_ids == -2] = -2
+    qelo, qehi = split_i64(q_ev)
+    cr_planes = np.asarray(
+        np.concatenate(split_i64(np.asarray([6000]))), np.int32
+    )
+    out = merge(
+        jnp.asarray(klo), jnp.asarray(khi), jnp.asarray(elo), jnp.asarray(ehi),
+        jnp.asarray(clo), jnp.asarray(chi), jnp.asarray(vals),
+        jnp.asarray(qlo), jnp.asarray(qhi), jnp.asarray(qelo), jnp.asarray(qehi),
+        jnp.asarray(q_vals), jnp.asarray(cr_planes), slot_block=slot_block,
+    )
+    want = merge_ref(keys, ev, cr, vals, q_ids, q_ev, q_vals, 6000)
+    np.testing.assert_array_equal(
+        combine_i64(np.asarray(out[0]), np.asarray(out[1])), want[0]
+    )
+    np.testing.assert_array_equal(np.asarray(out[4]), want[2])
+
+
+def test_route_flat_roundtrip():
+    rng = np.random.default_rng(0)
+    ids = rng.choice(np.arange(1, 10_000), size=200, replace=False).astype(np.int64)
+    payload = rng.random((200, 4)).astype(np.float32)
+    routed_ids, _, _, routed_payload = route_flat(8, ids, payload)
+    # every id lands exactly once, in its hash partition
+    flat = routed_ids[routed_ids != -2]
+    assert sorted(flat.tolist()) == sorted(ids.tolist())
+    part = partition_of(ids, 8)
+    for j, _id in enumerate(ids):
+        p = part[j]
+        slot = np.flatnonzero(routed_ids[p] == _id)
+        assert len(slot) == 1
+        np.testing.assert_array_equal(routed_payload[p, slot[0]], payload[j])
+
+
+def test_route_and_merge_empty_batch():
+    keys = np.full((2, 8), -1, np.int64)
+    klo, khi = split_i64(keys)
+    ev = np.zeros((2, 8), np.int64)
+    cr = np.zeros((2, 8), np.int64)
+    vals = np.zeros((2, 8, 3), np.float32)
+    ev_u, cr_u, vals_u = route_and_merge(
+        klo, khi, ev, cr, vals, np.zeros(0, np.int64), np.zeros(0, np.int64),
+        np.zeros((0, 3), np.float32), 100,
+    )
+    np.testing.assert_array_equal(ev_u, ev)
+    np.testing.assert_array_equal(vals_u, vals)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n_q=st.integers(1, 80))
+def test_route_and_merge_property(seed, n_q):
+    """Latest-wins invariant end-to-end: after the merge, every queried slot
+    holds max((ev, cr), (q_ev, batch_cr)); untouched slots are unchanged."""
+    rng = np.random.default_rng(seed)
+    keys, ev, cr, vals, live = _build_table(rng, 4, 128, 300)
+    klo, khi = split_i64(keys)
+    pick = rng.choice(live, size=min(n_q, len(live)), replace=False)
+    q_ev = rng.integers(0, 2000, len(pick)).astype(np.int64)
+    q_vals = rng.random((len(pick), 3)).astype(np.float32)
+    batch_cr = int(rng.integers(500, 2500))
+    ev_u, cr_u, vals_u = route_and_merge(
+        klo, khi, ev, cr, vals, pick, q_ev, q_vals, batch_cr
+    )
+    part = partition_of(pick, 4)
+    touched = set()
+    for j, pid in enumerate(pick):
+        p = part[j]
+        s = int(np.flatnonzero(keys[p] == pid)[0])
+        touched.add((p, s))
+        if (int(q_ev[j]), batch_cr) > (int(ev[p, s]), int(cr[p, s])):
+            assert ev_u[p, s] == q_ev[j] and cr_u[p, s] == batch_cr
+            np.testing.assert_array_equal(vals_u[p, s], q_vals[j])
+        else:
+            assert ev_u[p, s] == ev[p, s] and cr_u[p, s] == cr[p, s]
+            np.testing.assert_array_equal(vals_u[p, s], vals[p, s])
+    for p in range(4):
+        for s in range(128):
+            if (p, s) not in touched:
+                assert ev_u[p, s] == ev[p, s]
