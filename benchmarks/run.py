@@ -75,24 +75,34 @@ def main() -> None:
     out.write_text(json.dumps(results, indent=1, default=str))
     print(f"\nwrote {out}")
 
-    # Standalone materialization artifact: the merge-path perf trajectory is
-    # tracked PR-over-PR from this file (BENCH_materialization.json at the
-    # repo root).  --fast runs use a different workload (20k window), so they
-    # must not overwrite the tracked full-size numbers.
-    mat = results.get("materialization")
-    if mat and mat.get("ok") and not args.fast:
-        artifact = Path(__file__).resolve().parent.parent / "BENCH_materialization.json"
+    # Standalone perf-trajectory artifacts, tracked PR-over-PR at the repo
+    # root.  --fast runs use different workloads, so they must not overwrite
+    # the tracked full-size numbers:
+    #   BENCH_materialization.json — merge-path throughput trajectory
+    #   BENCH_online_store.json    — serving-path latency (both GET paths) +
+    #                                the resident-cycle transfer profile (the
+    #                                O(batch) guarantee of the device-resident
+    #                                online store)
+    def write_artifact(suite: str, filename: str, keys: tuple[str, ...]) -> None:
+        res = results.get(suite)
+        if not (res and res.get("ok")) or args.fast:
+            return
+        artifact = Path(__file__).resolve().parent.parent / filename
         artifact.write_text(
             json.dumps(
-                {
-                    "merge_engines": mat["result"].get("merge_engines"),
-                    "throughput": mat["result"].get("throughput"),
-                },
-                indent=1,
-                default=str,
+                {k: res["result"].get(k) for k in keys}, indent=1, default=str
             )
         )
         print(f"wrote {artifact}")
+
+    write_artifact(
+        "materialization", "BENCH_materialization.json",
+        ("merge_engines", "throughput"),
+    )
+    write_artifact(
+        "online_store", "BENCH_online_store.json",
+        ("lookup_table", "merge_engines", "resident_cycle"),
+    )
 
     failed = [n for n, r in results.items() if not r.get("ok")]
     if failed:

@@ -1,13 +1,22 @@
 #!/usr/bin/env bash
 # Tier-1 verify: the ROADMAP gate every PR must keep green.
 #
-#   scripts/tier1.sh              # full suite
+#   scripts/tier1.sh              # full suite + serving-path bench smoke
 #   scripts/tier1.sh tests/core   # any extra pytest args pass through
 #
 # Wraps the canonical command with PYTHONPATH setup so it works from any
-# checkout without an editable install.
+# checkout without an editable install.  After pytest, a fast benchmark
+# smoke runs the online-store suite — bench_online_store raises on a
+# transfer regression (table-sized host<->device traffic on the serving
+# path), so a regression fails tier-1 instead of silently eroding the
+# perf trajectory.  Set TIER1_SKIP_BENCH=1 to run tests only.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -x -q -p no:cacheprovider "$@"
+python -m pytest -x -q -p no:cacheprovider "$@"
+
+if [[ "${TIER1_SKIP_BENCH:-0}" != "1" ]]; then
+  echo "=== tier-1 bench smoke (serving-path transfer guard) ==="
+  python -m benchmarks.run --fast --only online_store --out results/bench_fast.json
+fi

@@ -227,6 +227,10 @@ class FeatureStore:
         for name, version in self.registry.list_feature_sets():
             ms = self.scheduler.staleness(name, version, now)
             self.monitor.record_staleness(name, version, ms)
+        # surface the online store's host<->device traffic ledger so a
+        # transfer regression on the serving path shows up in monitoring
+        for k, v in self.online.transfer_stats().items():
+            self.monitor.system.set_gauge(f"online_store/{k}", v)
 
     # -- state checkpoint (resume without data loss) ----------------------------------
     def scheduler_state(self) -> str:

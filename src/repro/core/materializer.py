@@ -63,6 +63,9 @@ class MaterializationOutcome:
     offline_merged: bool
     online_merged: bool
     creation_ts: int
+    # per-batch Algorithm-2 stats from the online merge plan (tallies +
+    # touched-slot count) — the reduced form geo-replication will ship
+    online_stats: Optional[dict] = None
 
 
 class Materializer:
@@ -104,13 +107,23 @@ class Materializer:
             self.offline.merge(spec, frame, creation_ts, engine=self.merge_engine)
             offline_done = True
         self.faults.check("between_merges")
+        online_stats = None
         if spec.materialization.online_enabled:
-            self.online.merge(spec, frame, creation_ts, engine=self.merge_engine)
+            stats = self.online.merge(
+                spec, frame, creation_ts, engine=self.merge_engine
+            )
+            online_stats = {
+                "inserts": stats["inserts"],
+                "overrides": stats["overrides"],
+                "noops": stats["noops"],
+                "touched_slots": len(stats["touched_slots"]),
+            }
             online_done = True
         self.faults.check("after_merges")
 
         outcome = MaterializationOutcome(
-            job.job_id, len(frame), offline_done, online_done, creation_ts
+            job.job_id, len(frame), offline_done, online_done, creation_ts,
+            online_stats=online_stats,
         )
         self.outcomes.append(outcome)
         return outcome

@@ -133,6 +133,11 @@ class OnlineBatchPlan:
     winner_row: np.ndarray    # (G,) int64 — original row of the winning record
     winner_ev: np.ndarray     # (G,) int64 — the id's max event_ts in the batch
     first_row: np.ndarray     # (G,) int64 — original row of first occurrence
+    # beat is the write mask: True exactly where the store state changes
+    # (fresh inserts and winners beating the stored record).  The per-batch
+    # stats a merge returns (tallies + touched-slot coords) are this plan
+    # masked down — nothing is re-derived from store state after the apply,
+    # which is what lets the device-resident engine skip pulling planes back.
     beat: np.ndarray          # (G,) bool — store record must be (re)written
     is_new: np.ndarray        # (G,) bool — id absent from the store
     inserts: int

@@ -15,6 +15,12 @@ native); a match requires both planes to agree.
 
 Grid: (partition, slot-block), slot minor/sequential; scratch keeps the best
 (1-based) slot per query, 0 = not found.
+
+Device-resident contract (core/online_store.py): the key planes live on
+device across calls — the store passes the same jax arrays every GET, so the
+only per-call traffic is the routed queries up and the (P, Q) slot indices
+down.  Value/timestamp rows are then fetched at those slots by
+``ops.gather_rows``; the kernel itself never touches the value planes.
 """
 
 from __future__ import annotations

@@ -6,8 +6,17 @@ partitioned layout this kernel expects.  This module provides:
   * ``split_i64`` / ``partition_of`` — the shared hashing/key-splitting
     helpers (numpy, host-side) so the store and the kernel agree bit-for-bit.
   * ``lookup`` — the jit'd kernel wrapper over pre-routed (P, Q) queries.
+    Passing device-RESIDENT key planes (jax arrays) makes this transfer-free
+    on the table side: only the routed queries go up and the (P, Q) slot
+    indices come back — O(batch), never O(P·C).
+  * ``gather_rows`` — the resident GET's second half: fetch feature rows and
+    creation_ts planes at resolved (part, slot) coords on device, so a
+    lookup returns (B, D) + (B,) arrays without the host ever holding the
+    value planes.
   * ``route_and_lookup`` — host-side convenience: route a flat id batch to
-    partitions, pad, run the kernel, gather values, un-permute.
+    partitions, pad, run the kernel, gather values, un-permute.  Used by the
+    host-mirror path and tests; the store's kernel GET composes the resident
+    pieces instead.
 """
 
 from __future__ import annotations
@@ -24,9 +33,11 @@ __all__ = [
     "split_i64",
     "combine_i64",
     "partition_of",
+    "gather_rows",
     "lookup",
     "route_and_lookup",
     "route_flat",
+    "route_queries",
 ]
 
 _LANE = 128
@@ -127,6 +138,47 @@ def lookup(
     return out[:, :q]
 
 
+def route_queries(
+    num_partitions: int, ids: np.ndarray
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Route a flat id batch into kernel-ready (P, Q) query planes.
+
+    Returns (q_lo, q_hi, part, pos): int32 planes lane-padded host-side (one
+    jit trace per lane bucket instead of per routing high-water mark) with
+    every pad entry stamped to the (-2, -2) sentinel — the ONE place that
+    invariant lives: pads must match neither live keys (split planes can be
+    anything >= 0) nor the empty-slot sentinel (-1, -1).  ``part``/``pos``
+    un-permute kernel results back to batch order."""
+    routed_ids, part, pos = route_flat(num_partitions, ids)[:3]
+    qmax = routed_ids.shape[1]
+    qpad = _round_up(qmax, _LANE)
+    if qpad != qmax:
+        routed_ids = np.concatenate(
+            [routed_ids, np.full((num_partitions, qpad - qmax), -2, np.int64)],
+            axis=1,
+        )
+    q_lo, q_hi = split_i64(routed_ids)
+    pad = routed_ids == -2
+    q_lo[pad] = -2
+    q_hi[pad] = -2
+    return q_lo, q_hi, part, pos
+
+
+@jax.jit
+def gather_rows(
+    values: jnp.ndarray,
+    cr_lo: jnp.ndarray,
+    cr_hi: jnp.ndarray,
+    part: jnp.ndarray,
+    slot: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Resident gather: (part, slot) (B,) int32 coords -> feature rows
+    (B, D) f32 + creation_ts planes (B,) int32.  Misses should be clamped
+    to slot 0 by the caller and masked after; the creation planes feed the
+    TTL check so expiry never needs the host timestamp mirror."""
+    return values[part, slot], cr_lo[part, slot], cr_hi[part, slot]
+
+
 def route_and_lookup(
     keys_lo: np.ndarray,
     keys_hi: np.ndarray,
@@ -144,11 +196,7 @@ def route_and_lookup(
     b = len(ids)
     if b == 0:
         return np.zeros((0, values.shape[-1]), np.float32), np.zeros((0,), bool)
-    routed_ids, part, slot_in_part = route_flat(num_p, ids)
-    q_lo, q_hi = split_i64(routed_ids)
-    pad = routed_ids == -2
-    q_lo[pad] = -2
-    q_hi[pad] = -2
+    q_lo, q_hi, part, slot_in_part = route_queries(num_p, ids)
 
     slots = np.asarray(
         lookup(

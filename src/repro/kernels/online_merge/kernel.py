@@ -16,11 +16,20 @@ because each output row has exactly one contributing term).
 
 Timestamps are int64 split into (lo, hi) int32 planes like keys; lexicographic
 compare is signed on the hi plane, unsigned (sign-bit-flipped) on the lo
-plane.  Inserted slots are pre-stamped with INT64_MIN timestamps host-side so
-any real record wins them.
+plane.  Callers routing fresh inserts through this scan must pre-stamp those
+slots with INT64_MIN timestamps so any real record wins them (the resident
+store path instead applies inserts via ops.merge_at_slots' ``is_new`` mask).
 
 Grid: (partition, slot-block); queries + routed values stay resident per
 partition while slot blocks stream through.
+
+The table planes are ALIASED input->output (``input_output_aliases``): when
+the caller's jit donates them (kernels/online_merge/ops.py does), the kernel
+rewrites the planes in their existing device buffers instead of allocating
+fresh outputs — the device-resident online store (core/online_store.py)
+relies on this so a merge never materializes a second copy of the table.
+Callers that retain references to the inputs still get value semantics (XLA
+falls back to a defensive copy).
 """
 
 from __future__ import annotations
@@ -31,7 +40,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["merge_kernel_call"]
+__all__ = ["i64_gt", "merge_kernel_call"]
 
 def _u32_gt(a, b):
     """Unsigned > on int32 bit patterns (flip sign bit, compare signed)."""
@@ -39,8 +48,12 @@ def _u32_gt(a, b):
     return (a ^ sign) > (b ^ sign)
 
 
-def _i64_gt(ahi, alo, bhi, blo):
-    """(ahi, alo) > (bhi, blo) as int64: signed hi, unsigned lo."""
+def i64_gt(ahi, alo, bhi, blo):
+    """(ahi, alo) > (bhi, blo) as int64: signed hi, unsigned lo.
+
+    Public: the split-plane lexicographic compare is a cross-module contract
+    — the Pallas scan kernel below and ops.merge_at_slots (the resident
+    scatter path) must agree bit-for-bit on it."""
     return (ahi > bhi) | ((ahi == bhi) & _u32_gt(alo, blo))
 
 
@@ -63,9 +76,9 @@ def _merge_kernel(
     crhi = cr_ref[1]
 
     match = (klo == qlo) & (khi == qhi)                     # (Cb, Q)
-    ev_gt = _i64_gt(qehi, qelo, ehi, elo)
+    ev_gt = i64_gt(qehi, qelo, ehi, elo)
     ev_eq = (qehi == ehi) & (qelo == elo)
-    cr_gt = _i64_gt(crhi, crlo, chi, clo)                   # (Cb, 1)
+    cr_gt = i64_gt(crhi, crlo, chi, clo)                   # (Cb, 1)
     win = match & (ev_gt | (ev_eq & cr_gt))                 # (Cb, Q)
 
     any_win = win.any(axis=1, keepdims=True)                # (Cb, 1)
@@ -127,6 +140,9 @@ def merge_kernel_call(
     return pl.pallas_call(
         _merge_kernel,
         grid=grid,
+        # ev_lo/ev_hi/cr_lo/cr_hi/values update in place when donated
+        # (positions 8..12 of the operand list below -> outputs 0..4)
+        input_output_aliases={8: 0, 9: 1, 10: 2, 11: 3, 12: 4},
         in_specs=[
             qspec(), qspec(), qspec(), qspec(),
             pl.BlockSpec((1, q, d), lambda pb, cb: (pb, 0, 0)),

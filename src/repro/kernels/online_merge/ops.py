@@ -1,9 +1,29 @@
-"""jit'd wrapper + host routing for the online-merge kernel.
+"""jit'd wrappers + host routing for the online-merge write path.
 
-Mirror of kernels/online_lookup/ops.py on the write side: route a flat,
-per-id-winner batch to hash partitions (fully vectorized scatter — this IS
-the throughput path), pad to lane shapes, split int64 ids/timestamps into
-int32 planes, run the kernel, and recombine the updated planes.
+Two device-side merge variants share the partitioned plane layout:
+
+  * ``merge_at_slots`` — the DEVICE-RESIDENT hot path.  The store's sorted
+    key index already resolved each winner record to its (partition, slot),
+    so the compare-and-update is an O(batch) gather/lex-compare/scatter over
+    donated planes (``donate_argnums``): the table buffers are rewritten in
+    place, nothing table-sized crosses host<->device, and only the routed
+    batch (coords + winner planes + feature rows) is uploaded.  The
+    latest-wins decision itself still happens ON DEVICE — host tallies come
+    from the merge plan and agree by construction — which is what makes the
+    device planes a self-contained Algorithm-2 state machine (safe to replay
+    for geo-replication).
+  * ``merge`` / ``route_and_merge`` — the index-free streaming variant:
+    route a flat per-id-winner batch to hash partitions, pad to lane shapes,
+    split int64 ids/timestamps into int32 planes, and let the Pallas kernel
+    broadcast-match every slot block (O(C·Q) scan).  Retained as the parity
+    reference and for callers without a host-side slot index; its table
+    planes are aliased input->output so it also updates in place when jitted
+    with donation.
+
+``gather_slot_ts`` is the read half of the resident protocol: fetch the
+current (event_ts, creation_ts) planes at resolved coords so the host merge
+plan can compute exact insert/override/no-op tallies against device truth
+without pulling whole planes back.
 """
 
 from __future__ import annotations
@@ -19,15 +39,105 @@ from repro.kernels.online_lookup.ops import (
     route_flat,
     split_i64,
 )
-from repro.kernels.online_merge.kernel import merge_kernel_call
+from repro.kernels.online_merge.kernel import i64_gt, merge_kernel_call
 
-__all__ = ["merge", "route_and_merge", "route_flat"]
+__all__ = [
+    "gather_slot_ts",
+    "merge",
+    "merge_at_slots",
+    "route_and_merge",
+    "route_flat",
+]
 
 _LANE = 128
 
 
 def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3, 4, 5, 6))
+def merge_at_slots(
+    keys_lo: jnp.ndarray,
+    keys_hi: jnp.ndarray,
+    ev_lo: jnp.ndarray,
+    ev_hi: jnp.ndarray,
+    cr_lo: jnp.ndarray,
+    cr_hi: jnp.ndarray,
+    values: jnp.ndarray,
+    part: jnp.ndarray,
+    slot: jnp.ndarray,
+    q_klo: jnp.ndarray,
+    q_khi: jnp.ndarray,
+    is_new: jnp.ndarray,
+    q_ev_lo: jnp.ndarray,
+    q_ev_hi: jnp.ndarray,
+    cr_planes: jnp.ndarray,
+    q_values: jnp.ndarray,
+) -> tuple[jnp.ndarray, ...]:
+    """Donated-buffer compare-and-update at index-resolved slots.
+
+    All seven table planes are DONATED — the update happens in the planes'
+    existing device buffers; callers must drop their references and adopt
+    the returned arrays.  Batch arrays are per-unique-id winner records in
+    any order: ``part``/``slot`` (G,) int32 target coords, ``q_klo/q_khi``
+    the key planes to stamp where ``is_new`` (fresh inserts, possibly into
+    recycled slots), ``q_ev_lo/q_ev_hi`` winner event_ts planes,
+    ``cr_planes`` (2,) int32 [lo, hi] of the shared batch creation_ts, and
+    ``q_values`` (G, D) feature rows.  Coords must be distinct (the merge
+    plan guarantees one winner per id, the index one slot per id).
+
+    Algorithm 2, online branch, per coord: new slots always take the
+    record; live slots take it iff (ev, cr) >lex (old_ev, old_cr).  The
+    compare runs on device against device truth, so host mirrors can be
+    arbitrarily stale.
+    """
+    old_elo = ev_lo[part, slot]
+    old_ehi = ev_hi[part, slot]
+    old_clo = cr_lo[part, slot]
+    old_chi = cr_hi[part, slot]
+    crlo = jnp.broadcast_to(cr_planes[0], part.shape)
+    crhi = jnp.broadcast_to(cr_planes[1], part.shape)
+
+    ev_gt = i64_gt(q_ev_hi, q_ev_lo, old_ehi, old_elo)
+    ev_eq = (q_ev_hi == old_ehi) & (q_ev_lo == old_elo)
+    cr_gt = i64_gt(crhi, crlo, old_chi, old_clo)
+    win = is_new | ev_gt | (ev_eq & cr_gt)
+
+    keys_lo = keys_lo.at[part, slot].set(
+        jnp.where(is_new, q_klo, keys_lo[part, slot])
+    )
+    keys_hi = keys_hi.at[part, slot].set(
+        jnp.where(is_new, q_khi, keys_hi[part, slot])
+    )
+    ev_lo = ev_lo.at[part, slot].set(jnp.where(win, q_ev_lo, old_elo))
+    ev_hi = ev_hi.at[part, slot].set(jnp.where(win, q_ev_hi, old_ehi))
+    cr_lo = cr_lo.at[part, slot].set(jnp.where(win, crlo, old_clo))
+    cr_hi = cr_hi.at[part, slot].set(jnp.where(win, crhi, old_chi))
+    values = values.at[part, slot].set(
+        jnp.where(win[:, None], q_values, values[part, slot])
+    )
+    return keys_lo, keys_hi, ev_lo, ev_hi, cr_lo, cr_hi, values
+
+
+@jax.jit
+def gather_slot_ts(
+    ev_lo: jnp.ndarray,
+    ev_hi: jnp.ndarray,
+    cr_lo: jnp.ndarray,
+    cr_hi: jnp.ndarray,
+    part: jnp.ndarray,
+    slot: jnp.ndarray,
+) -> tuple[jnp.ndarray, ...]:
+    """(part, slot) (G,) int32 -> the four int32 timestamp planes at those
+    coords — the O(batch) read that lets the host merge plan see device
+    truth without syncing whole planes."""
+    return (
+        ev_lo[part, slot],
+        ev_hi[part, slot],
+        cr_lo[part, slot],
+        cr_hi[part, slot],
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("slot_block", "interpret"))

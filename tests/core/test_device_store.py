@@ -1,0 +1,274 @@
+"""Device-resident online store: host-mirror/device-truth protocol.
+
+The contract under test (ISSUE 2 tentpole): device memory is the source of
+truth for the kernel engine's planes; host numpy mirrors are lazy, dirty-
+tracked, synced on demand, and invalidated across ``_grow``/``sweep``/engine
+switches.  Stale-mirror reads are the main new failure mode, so every
+host-facing consumer (``dump_all``, ``get_record``, host-path lookups, the
+``vector``/``loop`` engines) is exercised against fresh kernel merges; and a
+steady-state merge+lookup cycle must move O(batch) bytes host<->device, not
+O(P·C·D).  Sweep slot recycling (the TTL-churn capacity leak fix) is covered
+here too, across all three engines.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.assets import Entity, Feature, FeatureSetSpec, MaterializationSettings
+from repro.core.dsl import UDFTransform
+from repro.core.online_store import OnlineStore, o_batch_byte_budget
+from repro.core.table import Table
+from tests.core.test_merge_engine import assert_online_identical
+
+
+def make_spec(ttl=None, n_feats=1):
+    return FeatureSetSpec(
+        name="fs",
+        version=1,
+        entity=Entity("cust", ("entity_id",)),
+        features=tuple(Feature(f"f{i}") for i in range(n_feats)),
+        source_name="src",
+        transform=UDFTransform(lambda df, ctx: df, name="id"),
+        materialization=MaterializationSettings(True, True, online_ttl=ttl),
+    )
+
+
+def make_frame(rng, n, id_hi, ev_hi, n_feats=1):
+    cols = {
+        "entity_id": rng.integers(0, id_hi, n).astype(np.int64),
+        "ts": rng.integers(0, ev_hi, n).astype(np.int64),
+    }
+    for i in range(n_feats):
+        cols[f"f{i}"] = rng.random(n).astype(np.float32)
+    return Table(cols)
+
+
+# -- TTL expiry parity: kernel (device) vs host lookup path -------------------
+
+
+def test_ttl_expiry_parity_kernel_vs_host_lookup():
+    """Same store, both GET paths, across the expiry boundary: byte-identical
+    (values AND found), with the kernel path reading creation_ts from device
+    truth rather than the host mirror."""
+    spec = make_spec(ttl=100)
+    store = OnlineStore(num_partitions=4, merge_engine="kernel")
+    rng = np.random.default_rng(0)
+    store.merge(spec, make_frame(rng, 60, 20, 50), 1_000)
+    store.merge(spec, make_frame(rng, 60, 20, 80), 1_050)  # half re-stamped
+    ids = [np.arange(25, dtype=np.int64)]
+    # now=None skips TTL; then just-inside, boundary (not expired: > is
+    # strict), and past-expiry for the older creation_ts cohort
+    for now in (None, 1_060, 1_100, 1_120, 1_200):
+        vk, fk = store.lookup("fs", 1, ids, now=now, use_kernel=True)
+        vh, fh = store.lookup("fs", 1, ids, now=now, use_kernel=False)
+        np.testing.assert_array_equal(fk, fh, err_msg=f"found @ now={now}")
+        np.testing.assert_array_equal(vk, vh, err_msg=f"values @ now={now}")
+    # fully expired: both paths agree on nothing found
+    _, fk = store.lookup("fs", 1, ids, now=10_000, use_kernel=True)
+    _, fh = store.lookup("fs", 1, ids, now=10_000, use_kernel=False)
+    assert not fk.any() and not fh.any()
+
+
+def test_ttl_parity_after_sweep_and_reinsert():
+    spec = make_spec(ttl=50)
+    store = OnlineStore(num_partitions=2, initial_capacity=8, merge_engine="kernel")
+    rng = np.random.default_rng(1)
+    store.merge(spec, make_frame(rng, 30, 10, 5), 100)
+    store.sweep("fs", 1, now=200)  # everything expired + freed
+    store.merge(spec, make_frame(rng, 30, 10, 5), 300)  # recycled slots
+    ids = [np.arange(10, dtype=np.int64)]
+    for now in (310, 349, 350, 351, 400):
+        vk, fk = store.lookup("fs", 1, ids, now=now, use_kernel=True)
+        vh, fh = store.lookup("fs", 1, ids, now=now, use_kernel=False)
+        np.testing.assert_array_equal(fk, fh, err_msg=f"now={now}")
+        np.testing.assert_array_equal(vk, vh, err_msg=f"now={now}")
+
+
+# -- mirror invalidation across engine switches / grow / sweep / dump ---------
+
+
+def test_engine_switch_sequences_stay_identical():
+    """kernel -> vector -> kernel -> loop on ONE store: every switch crosses
+    the device/host truth boundary (sync + drop on the way down, re-upload
+    on the way up).  End state must match a pure-loop store."""
+    spec = make_spec()
+    mixed = OnlineStore(num_partitions=4, initial_capacity=8)
+    ref = OnlineStore(num_partitions=4, initial_capacity=8, merge_engine="loop")
+    rng = np.random.default_rng(2)
+    frames = [make_frame(rng, 50, 30, 6) for _ in range(4)]
+    for i, (f, engine) in enumerate(
+        zip(frames, ("kernel", "vector", "kernel", "loop"))
+    ):
+        mixed.merge(spec, f, 1_000 + i, engine=engine)
+        ref.merge(spec, f, 1_000 + i, engine="loop")
+    assert_online_identical(mixed, ref, spec, "engine switching")
+
+
+def test_host_reads_see_kernel_merges():
+    """dump_all / get_record / host lookup immediately after kernel merges:
+    the lazy mirror must sync, not serve stale planes."""
+    spec = make_spec()
+    store = OnlineStore(num_partitions=4, merge_engine="kernel")
+    rng = np.random.default_rng(3)
+    store.merge(spec, make_frame(rng, 40, 15, 10), 500)
+    t = store._tables[spec.key]
+    assert t.host_stale  # kernel merge advanced device truth
+    # an override the stale mirror doesn't know about
+    f = Table({
+        "entity_id": np.array([3], np.int64),
+        "ts": np.array([99], np.int64),
+        "f0": np.array([7.5], np.float32),
+    })
+    store.merge(spec, f, 600)
+    rec = store.get_record("fs", 1, [np.array([3])])[0]
+    assert rec["event_ts"] == 99 and rec["features"][0] == 7.5
+    assert not t.host_stale  # get_record synced
+    store.merge(spec, f, 700)  # noop (same ev, but cr 700 > 600 -> override)
+    dump = store.dump_all("fs", 1)
+    i = int(np.searchsorted(dump["__key__"], 3))
+    assert dump["creation_ts"][i] == 700
+    v, fd = store.lookup("fs", 1, [np.array([3])], use_kernel=False)
+    assert fd[0] and v[0, 0] == 7.5
+
+
+def test_grow_mid_kernel_stream_identical():
+    """Capacity doublings during kernel merges force sync+drop+reupload;
+    state stays byte-identical to the loop reference."""
+    spec = make_spec()
+    k = OnlineStore(num_partitions=2, initial_capacity=4, merge_engine="kernel")
+    l = OnlineStore(num_partitions=2, initial_capacity=4, merge_engine="loop")
+    rng = np.random.default_rng(4)
+    ids = rng.permutation(np.arange(300, dtype=np.int64))
+    for lo in range(0, 300, 60):  # growth interleaved with merges
+        f = Table({
+            "entity_id": ids[lo:lo + 60],
+            "ts": np.full(60, 5, np.int64),
+            "f0": rng.random(60).astype(np.float32),
+        })
+        k.merge(spec, f, 1_000 + lo)
+        l.merge(spec, f, 1_000 + lo)
+    assert_online_identical(k, l, spec, "grow under kernel engine")
+    assert k._tables[spec.key].keys_lo.shape[1] >= 256
+
+
+def test_mirror_is_writable_after_kernel_merge():
+    """Regression: the PR-1 kernel path left np views of device buffers as
+    host planes — a later loop/vector merge on the same store would raise
+    'assignment destination is read-only'.  The sync protocol must hand the
+    host engines writable mirrors."""
+    spec = make_spec()
+    store = OnlineStore(num_partitions=2, merge_engine="kernel")
+    rng = np.random.default_rng(5)
+    store.merge(spec, make_frame(rng, 20, 8, 5), 100)
+    store.merge(spec, make_frame(rng, 20, 8, 5), 200, engine="loop")  # must not raise
+    store.merge(spec, make_frame(rng, 20, 8, 5), 300, engine="vector")
+    for plane in ("event_ts", "creation_ts", "values"):
+        assert getattr(store._tables[spec.key], plane).flags.writeable
+
+
+# -- sweep slot recycling (TTL-churn capacity leak fix) -----------------------
+
+
+@pytest.mark.parametrize("engine", ["loop", "vector", "kernel"])
+def test_sweep_recycles_slots_capacity_bounded(engine):
+    """Rolling TTL churn: every generation expires and is swept before the
+    next insert wave.  With free-list recycling the partitions must never
+    grow past their initial capacity (the pre-fix store doubled forever)."""
+    spec = make_spec(ttl=10)
+    store = OnlineStore(
+        num_partitions=2, initial_capacity=64, merge_engine=engine
+    )
+    rng = np.random.default_rng(6)
+    for gen in range(8):
+        ids = (gen * 100 + np.arange(80)).astype(np.int64)  # fresh ids per gen
+        f = Table({
+            "entity_id": ids,
+            "ts": np.full(80, gen, np.int64),
+            "f0": rng.random(80).astype(np.float32),
+        })
+        now = gen * 100
+        if gen:
+            store.sweep("fs", 1, now=now)
+        store.merge(spec, f, now + 1)
+    t = store._tables[spec.key]
+    assert t.keys_lo.shape[1] == 64, "TTL churn leaked capacity"
+    assert store.num_records("fs", 1) == 80
+    # fill is bounded by live records + transient imbalance, never cumulative
+    assert int(t.fill.sum()) <= 128
+
+
+def test_sweep_recycling_parity_across_engines():
+    """Sweep-heavy interleavings with partial expiry: all engines assign
+    recycled slots identically (free lists are part of the compared state)."""
+    spec = make_spec(ttl=40)
+    stores = {
+        e: OnlineStore(num_partitions=4, initial_capacity=8, merge_engine=e)
+        for e in ("loop", "vector", "kernel")
+    }
+    rng = np.random.default_rng(7)
+    for step in range(6):
+        frame = make_frame(rng, 30, 25, 5)
+        now = 100 + step * 30
+        for store in stores.values():
+            if step % 2:
+                store.sweep("fs", 1, now=now)
+            store.merge(spec, frame, now)
+    assert_online_identical(stores["loop"], stores["vector"], spec, "sweep/vector")
+    assert_online_identical(stores["loop"], stores["kernel"], spec, "sweep/kernel")
+
+
+# -- transfer accounting: steady state is O(batch) ----------------------------
+
+
+def test_steady_state_cycle_moves_o_batch_bytes():
+    """After warmup, a kernel merge+lookup cycle must not re-upload or pull
+    the (P, C, D) planes: zero device uploads, zero host syncs, and per-cycle
+    bytes bounded by a small multiple of the batch footprint — far below the
+    table footprint."""
+    spec = make_spec(ttl=None, n_feats=4)
+    store = OnlineStore(
+        num_partitions=8, initial_capacity=256, merge_engine="kernel"
+    )
+    rng = np.random.default_rng(8)
+    store.merge(spec, make_frame(rng, 20_000, 5_000, 100, n_feats=4), 10**6)
+    batch = 512
+    ids = [rng.integers(0, 5_000, batch).astype(np.int64)]
+    # warm both jitted paths at the steady batch shapes
+    store.merge(spec, make_frame(rng, batch, 5_000, 200, n_feats=4), 2 * 10**6)
+    store.lookup("fs", 1, ids)
+    store.reset_transfer_stats()
+
+    cycles = 10
+    for i in range(cycles):
+        store.merge(
+            spec, make_frame(rng, batch, 5_000, 300 + i, n_feats=4),
+            3 * 10**6 + i,
+        )
+        store.lookup("fs", 1, ids)
+    tx = store.transfer_stats()
+    assert tx["device_uploads"] == 0, "steady-state merge re-uploaded the table"
+    assert tx["host_syncs"] == 0, "steady-state cycle pulled the host mirror"
+
+    table_bytes = store.device_state("fs", 1).nbytes()
+    per_cycle = (tx["h2d_bytes"] + tx["d2h_bytes"]) / cycles
+    record_bytes = 8 * 4 + 4 * 4  # id/ts planes + 4 f32 features
+    assert per_cycle <= o_batch_byte_budget(batch, record_bytes), (
+        f"per-cycle traffic {per_cycle} not O(batch)"
+    )
+    assert per_cycle < table_bytes / 4, (
+        f"per-cycle traffic {per_cycle} is table-sized ({table_bytes})"
+    )
+
+
+def test_transfer_ledger_counts_uploads_and_syncs():
+    spec = make_spec()
+    store = OnlineStore(num_partitions=2, merge_engine="kernel")
+    rng = np.random.default_rng(9)
+    store.merge(spec, make_frame(rng, 50, 20, 5), 100)
+    tx = store.transfer_stats()
+    assert tx["device_uploads"] >= 1 and tx["h2d_bytes"] > 0
+    assert tx["host_syncs"] == 0
+    store.dump_all("fs", 1)  # forces one mirror sync
+    assert store.transfer_stats()["host_syncs"] == 1
+    store.dump_all("fs", 1)  # mirror clean: no second pull
+    assert store.transfer_stats()["host_syncs"] == 1

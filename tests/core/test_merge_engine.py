@@ -53,11 +53,18 @@ def make_frame(rng, n, id_hi, ev_hi, n_feats=1):
 
 
 def assert_online_identical(a: OnlineStore, b: OnlineStore, spec, label=""):
+    # device-resident engines keep truth on device; pull the lazy host
+    # mirrors up to date before comparing planes byte-for-byte
+    a.sync_host_mirrors()
+    b.sync_host_mirrors()
     ta, tb = a._tables[spec.key], b._tables[spec.key]
     for f in _ONLINE_STATE:
         np.testing.assert_array_equal(
             getattr(ta, f), getattr(tb, f), err_msg=f"{label}: plane {f}"
         )
+    assert [list(f) for f in ta.free] == [list(f) for f in tb.free], (
+        f"{label}: free lists"
+    )
     assert (a.inserts, a.overrides, a.noops) == (b.inserts, b.overrides, b.noops), label
 
 
