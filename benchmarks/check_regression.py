@@ -1,0 +1,131 @@
+"""Bench-regression gate: fail CI when the serving path gets slower.
+
+Compares the tier-1 bench smoke's output (``results/bench_fast.json``,
+written by ``benchmarks/run.py --fast --only online_store``) against the
+committed trajectory artifact ``BENCH_online_store.json``.  Two classes of
+check:
+
+* TRANSFER BYTES (deterministic): the device-resident protocol's
+  steady-state byte counts are a function of workload shapes, not machine
+  speed, so any increase is a real regression — resident merge+lookup
+  cycles must not move more bytes per cycle than the committed baseline,
+  must never re-upload the table or sync the host mirror, and kernel GETs
+  must not grow their per-batch traffic.
+
+* MERGE THROUGHPUT (tolerance + calibration): rows/s is machine- and
+  load-dependent, so the committed baseline is first rescaled by how fast
+  THIS run's ``loop`` reference engine is relative to the baseline's —
+  the per-row loop runs the same code in both runs, making it a cheap
+  machine-speed probe.  The ``vector`` and ``kernel`` engines must then
+  stay within ``--tolerance`` (default 30%) of the calibrated baseline,
+  and ``vector`` must remain faster than ``loop`` outright (the
+  vectorization win is machine-independent).
+
+Runs locally from ``scripts/tier1.sh`` after the bench smoke, and as a
+dedicated CI step.  Exit code 1 on any regression.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+
+def load_online_store_result(path: Path) -> dict:
+    """Accept either a benchmarks/run.py output file (suite wrapper) or a
+    flat trajectory artifact."""
+    data = json.loads(path.read_text())
+    if "online_store" in data:
+        suite = data["online_store"]
+        if not suite.get("ok"):
+            raise SystemExit(f"{path}: online_store suite failed: {suite}")
+        return suite["result"]
+    return data
+
+
+def check_transfer_bytes(cur: dict, base: dict, failures: list[str]) -> None:
+    c, b = cur["resident_cycle"], base["resident_cycle"]
+    tx = c["transfers"]
+    if tx["device_uploads"] or tx["host_syncs"]:
+        failures.append(f"resident cycle re-moved the table: {tx}")
+    cyc, cyc_base = c["per_cycle_bytes"], b["per_cycle_bytes"]
+    if cyc > cyc_base:
+        failures.append(f"transfer bytes regressed: {cyc} B/cycle vs {cyc_base}")
+    else:
+        print(f"  ok: resident cycle {cyc} B/cycle (committed {cyc_base})")
+    base_rows = {}
+    for r in base["lookup_table"]:
+        base_rows[(r["entities"], r["batch"])] = r["kernel_get_bytes_per_batch"]
+    for row in cur["lookup_table"]:
+        key = (row["entities"], row["batch"])
+        if key not in base_rows:
+            continue
+        got, want = row["kernel_get_bytes_per_batch"], base_rows[key]
+        if got > want:
+            failures.append(f"kernel GET bytes regressed at {key}: {got} vs {want}")
+        else:
+            print(f"  ok: kernel GET {got} B/batch at {key} (committed {want})")
+
+
+def check_merge_throughput(
+    cur: dict, base: dict, tolerance: float, failures: list[str]
+) -> None:
+    c, b = cur["merge_engines"], base["merge_engines"]
+    cur_loop = c["loop"]["rows_per_s"]
+    base_loop = b["loop"]["rows_per_s"]
+    scale = min(1.0, cur_loop / base_loop)
+    print(f"  calibration: loop {cur_loop}/{base_loop} rows/s -> scale {scale:.2f}")
+    for engine in ("vector", "kernel"):
+        got = c[engine]["rows_per_s"]
+        floor = int(b[engine]["rows_per_s"] * scale * (1.0 - tolerance))
+        if got < floor:
+            msg = f"{engine} merge dropped >{tolerance:.0%}: {got} rows/s vs {floor}"
+            failures.append(msg)
+        else:
+            print(f"  ok: {engine} {got} rows/s (calibrated floor {floor})")
+    vec = c["vector"]["rows_per_s"]
+    if vec < cur_loop:
+        failures.append(f"vector ({vec} rows/s) fell behind loop ({cur_loop} rows/s)")
+
+
+def main() -> None:
+    repo = Path(__file__).resolve().parent.parent
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--current",
+        default=str(repo / "results" / "bench_fast.json"),
+        help="fresh bench output (benchmarks/run.py --fast --only online_store)",
+    )
+    ap.add_argument(
+        "--baseline",
+        default=str(repo / "BENCH_online_store.json"),
+        help="committed trajectory artifact to gate against",
+    )
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=float(os.environ.get("BENCH_TOLERANCE", "0.30")),
+        help="allowed fractional rows/s drop after calibration (default 0.30)",
+    )
+    args = ap.parse_args()
+
+    cur = load_online_store_result(Path(args.current))
+    base = load_online_store_result(Path(args.baseline))
+
+    failures: list[str] = []
+    print("bench-regression gate:")
+    check_transfer_bytes(cur, base, failures)
+    check_merge_throughput(cur, base, args.tolerance, failures)
+    if failures:
+        print("\nREGRESSIONS DETECTED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        raise SystemExit(1)
+    print("bench-regression gate: PASS")
+
+
+if __name__ == "__main__":
+    main()

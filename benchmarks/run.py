@@ -7,6 +7,8 @@ One module per claim in the paper (§ refs in each module's docstring):
   online_store     §2.1/§4.5  online GET latency + Algorithm-2 merge + staleness
   materialization  §4.3/§4.5.4  pipeline throughput, backfill, fault injection
   geo              §4.1.2  cross-region access vs geo-replication + stragglers
+  geo_replication  §4.1.2  the replication data plane measured: ship/apply
+                   throughput, local-read latency, failover replay
   roofline         (g)     §Roofline table from the dry-run artifacts
 
 Writes results/benchmarks.json; ``--only <name>`` runs a subset; ``--fast``
@@ -31,6 +33,7 @@ def main() -> None:
 
     from benchmarks import (  # noqa: PLC0415 — import after arg parsing
         bench_geo,
+        bench_geo_replication,
         bench_materialization,
         bench_online_store,
         bench_pit_retrieval,
@@ -53,6 +56,7 @@ def main() -> None:
             merge_window=20_000 if args.fast else 100_000,
         ),
         "geo": bench_geo.run,
+        "geo_replication": lambda: bench_geo_replication.run(fast=args.fast),
         "roofline": lambda: roofline_summary.summarize(),
     }
     only = {s for s in args.only.split(",") if s}
@@ -102,6 +106,10 @@ def main() -> None:
     write_artifact(
         "online_store", "BENCH_online_store.json",
         ("lookup_table", "merge_engines", "resident_cycle"),
+    )
+    write_artifact(
+        "geo_replication", "BENCH_geo_replication.json",
+        ("throughput", "read_latency", "failover"),
     )
 
     failed = [n for n, r in results.items() if not r.get("ok")]

@@ -8,8 +8,12 @@
 # checkout without an editable install.  After pytest, a fast benchmark
 # smoke runs the online-store suite — bench_online_store raises on a
 # transfer regression (table-sized host<->device traffic on the serving
-# path), so a regression fails tier-1 instead of silently eroding the
-# perf trajectory.  Set TIER1_SKIP_BENCH=1 to run tests only.
+# path) — and benchmarks/check_regression.py gates the fresh numbers
+# against the committed BENCH_online_store.json trajectory artifact
+# (transfer bytes exactly; merge rows/s within a machine-calibrated 30%).
+# CI (.github/workflows/ci.yml) runs this same script, so a regression
+# fails tier-1 locally and the workflow identically.
+# Set TIER1_SKIP_BENCH=1 to run tests only.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -19,4 +23,7 @@ python -m pytest -x -q -p no:cacheprovider "$@"
 if [[ "${TIER1_SKIP_BENCH:-0}" != "1" ]]; then
   echo "=== tier-1 bench smoke (serving-path transfer guard) ==="
   python -m benchmarks.run --fast --only online_store --out results/bench_fast.json
+  echo "=== tier-1 bench-regression gate ==="
+  python -m benchmarks.check_regression \
+    --current results/bench_fast.json --baseline BENCH_online_store.json
 fi

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Any, Callable, Optional
+from typing import Any, Optional
 
 import numpy as np
 

@@ -13,7 +13,7 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
-from repro.core.assets import Entity, FeatureSetSpec, MaterializationSettings
+from repro.core.assets import Entity, FeatureSetSpec
 from repro.core.consistency import (
     bootstrap_offline_to_online,
     bootstrap_online_to_offline,
@@ -25,7 +25,7 @@ from repro.core.monitoring import HealthMonitor
 from repro.core.offline_store import OfflineStore
 from repro.core.online_store import OnlineStore
 from repro.core.pit import get_offline_features
-from repro.core.registry import AssetRegistry, Workspace
+from repro.core.registry import AssetRegistry
 from repro.core.regions import (
     GeoPlacement,
     GeoTopology,
@@ -76,6 +76,9 @@ class FeatureStore:
         if topology is None:
             topology = GeoTopology(regions={region: Region(region)})
         self.geo = GeoPlacement(topology, region, replication)
+        # set by attach_replication when a GeoReplicator streams this store's
+        # online merges cross-region (core/replication.py)
+        self.replicator = None
         self._sources: dict[str, SourceProtocol] = {}
         self.interpret = interpret
 
@@ -211,6 +214,13 @@ class FeatureStore:
         self.offline.register(spec)
         return bootstrap_online_to_offline(spec, self.offline, self.online)
 
+    # -- geo-replication ---------------------------------------------------------
+    def attach_replication(self, replicator) -> None:
+        """Hook a GeoReplicator up to monitoring: per-replica lag/staleness
+        gauges refresh alongside the §2.1 staleness SLA metric.  The
+        replicator itself subscribes to ``online.merge_listeners``."""
+        self.replicator = replicator
+
     # -- lineage -----------------------------------------------------------------
     def track_model(
         self, model: ModelNode, feature_sets: Sequence[tuple[str, int]]
@@ -231,6 +241,11 @@ class FeatureStore:
         # transfer regression on the serving path shows up in monitoring
         for k, v in self.online.transfer_stats().items():
             self.monitor.system.set_gauge(f"online_store/{k}", v)
+        if self.replicator is not None:
+            for region in self.replicator.replica_regions():
+                self.monitor.record_replication_lag(
+                    region, **self.replicator.lag(region)
+                )
 
     # -- state checkpoint (resume without data loss) ----------------------------------
     def scheduler_state(self) -> str:

@@ -16,11 +16,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Optional
 
-from repro.core.assets import FeatureSetSpec, StoreKind
+from repro.core.assets import FeatureSetSpec
 from repro.core.offline_store import OfflineStore
 from repro.core.online_store import OnlineStore
 from repro.core.scheduler import MaterializationJob
-from repro.core.table import Table
 from repro.core.transform import SourceProtocol, compute_feature_window
 
 __all__ = ["FaultInjector", "Materializer", "MaterializationOutcome"]
@@ -117,6 +116,10 @@ class Materializer:
                 "overrides": stats["overrides"],
                 "noops": stats["noops"],
                 "touched_slots": len(stats["touched_slots"]),
+                # seq the geo-replication log assigned this batch (annotated
+                # by the GeoReplicator's merge listener; None when no
+                # replication is attached or the batch was all no-ops)
+                "replication_seq": stats.get("replication_seq"),
             }
             online_done = True
         self.faults.check("after_merges")

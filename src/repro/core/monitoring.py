@@ -82,6 +82,23 @@ class HealthMonitor:
     def record_lookup_latency(self, us: float) -> None:
         self.system.observe("online_lookup_us", us)
 
+    def record_replication_lag(
+        self, replica: str, *, batches: int, rows: int, staleness_ms: int
+    ) -> None:
+        """Per-replica geo-replication lag (§4.1.2 road-map mechanism): how
+        many un-acked merge batches/rows the replica is behind, and how old
+        the oldest pending batch is in clock units."""
+        self.system.set_gauge(f"replication/lag_batches/{replica}", float(batches))
+        self.system.set_gauge(f"replication/lag_rows/{replica}", float(rows))
+        self.system.set_gauge(
+            f"replication/staleness_ms/{replica}", float(staleness_ms)
+        )
+
+    def record_replication_ship(self, nbytes: int, rows: int) -> None:
+        self.system.inc("replication/shipped_batches")
+        self.system.inc("replication/shipped_rows", rows)
+        self.system.inc("replication/shipped_bytes", nbytes)
+
     def healthy(self) -> bool:
         failed = self.system.counters.get("jobs_failed", 0)
         ok = self.system.counters.get("jobs_succeeded", 0)

@@ -59,8 +59,16 @@ Write path — three interchangeable engines, byte-identical end states:
     (parity tests + old-style benchmark baseline).
 
 Every ``merge`` returns per-batch stats: the Algorithm-2 tallies plus the
-touched-slot coordinates (winning writes) — the reduced unit the async
-geo-replication path ships cross-region.
+touched-slot coordinates AND the reduced winner rows that landed there
+(encoded key, winning event_ts, feature row, shared creation_ts) — exactly
+the bytes the async geo-replication path (core/replication.py) ships
+cross-region.  ``merge_reduced`` is the matching apply side: it merges such
+a reduced batch (already-encoded int64 keys, stacked float32 values) through
+the same engines, so a replica replaying a shipped batch runs the identical
+latest-wins state machine — re-delivery and out-of-order delivery are safe
+because Algorithm 2 is an idempotent, commutative join on
+(event_ts, creation_ts).  ``merge_listeners`` fire after every successful
+merge with (spec, stats); the replication log subscribes there.
 """
 
 from __future__ import annotations
@@ -177,6 +185,9 @@ class OnlineStore:
         self.merge_engine = merge_engine
         self._tables: dict[tuple[str, int], _PartitionedTable] = {}
         self._specs: dict[tuple[str, int], FeatureSetSpec] = {}
+        # called as cb(spec, stats) after every merge/merge_reduced that ran;
+        # callbacks may annotate ``stats`` (e.g. replication seq numbers)
+        self.merge_listeners: list = []
         self.inserts = 0
         self.overrides = 0
         self.noops = 0
@@ -378,29 +389,90 @@ class OnlineStore:
         engine: Optional[str] = None,
     ) -> dict:
         """Merge one materialization frame.  Returns per-batch stats: exact
-        Algorithm-2 tallies plus the touched-slot coordinates (the slots a
-        winning write landed in, sorted by (part, slot)) — the reduced batch
-        form geo-replication ships."""
+        Algorithm-2 tallies plus the touched-slot coordinates and the reduced
+        winner rows that landed there (sorted by (part, slot)) — the reduced
+        batch form geo-replication ships."""
         engine = engine or self.merge_engine
         if engine not in ("vector", "kernel", "loop"):
             raise ValueError(f"unknown merge engine {engine!r}")
         self.register(spec)
         if len(frame) == 0:
-            return {
-                "engine": engine, "inserts": 0, "overrides": 0, "noops": 0,
-                "touched_parts": np.empty(0, np.int64),
-                "touched_slots": np.empty(0, np.int64),
-            }
+            return self._empty_stats(engine, len(spec.features), creation_ts)
         ids = encode_keys([frame[c] for c in spec.index_columns])
         event_ts = frame[spec.timestamp_col].astype(np.int64)
         fnames = [f.name for f in spec.features]
         if engine == "loop":
             feats = frame.column_stack(fnames, np.float32)
-            return self._merge_loop(spec.key, ids, event_ts, feats, creation_ts)
-        return self._merge_vector(
-            spec.key, ids, event_ts, frame, fnames, creation_ts,
-            use_kernel=(engine == "kernel"),
-        )
+            stats = self._merge_loop(spec.key, ids, event_ts, feats, creation_ts)
+        else:
+            stats = self._merge_vector(
+                spec.key, ids, event_ts, frame, fnames, creation_ts,
+                use_kernel=(engine == "kernel"),
+            )
+        for cb in self.merge_listeners:
+            cb(spec, stats)
+        return stats
+
+    def merge_reduced(
+        self,
+        spec: FeatureSetSpec,
+        keys: np.ndarray,
+        event_ts: np.ndarray,
+        values: np.ndarray,
+        creation_ts: int,
+        *,
+        engine: Optional[str] = None,
+    ) -> dict:
+        """Apply an already-reduced batch keyed by ENCODED int64 ids — the
+        geo-replication apply path (and snapshot-bootstrap path) a replica
+        store runs on a shipped ``ReplicatedBatch``.
+
+        ``keys`` are non-negative encoded entity keys exactly as a home
+        store's ``merge`` produced them (``touched_keys`` in its stats);
+        ``values`` is the (B, len(spec.features)) float32 winner plane.  The
+        batch goes through the SAME Algorithm-2 engines as ``merge``, so
+        re-delivered or out-of-order batches converge: latest-wins on
+        (event_ts, creation_ts) is an idempotent, commutative join."""
+        engine = engine or self.merge_engine
+        if engine not in ("vector", "kernel", "loop"):
+            raise ValueError(f"unknown merge engine {engine!r}")
+        self.register(spec)
+        keys = np.asarray(keys, np.int64)
+        event_ts = np.asarray(event_ts, np.int64)
+        values = np.asarray(values, np.float32)
+        if values.shape != (len(keys), len(spec.features)):
+            raise ValueError(
+                f"values plane {values.shape} does not match "
+                f"({len(keys)}, {len(spec.features)})"
+            )
+        if len(keys) and keys.min() < 0:
+            raise ValueError("reduced-batch keys must be encoded (non-negative)")
+        if len(keys) == 0:
+            return self._empty_stats(engine, len(spec.features), creation_ts)
+        if engine == "loop":
+            stats = self._merge_loop(spec.key, keys, event_ts, values, creation_ts)
+        else:
+            fnames = [f.name for f in spec.features]
+            frame = {n: values[:, j] for j, n in enumerate(fnames)}
+            stats = self._merge_vector(
+                spec.key, keys, event_ts, frame, fnames, creation_ts,
+                use_kernel=(engine == "kernel"),
+            )
+        for cb in self.merge_listeners:
+            cb(spec, stats)
+        return stats
+
+    @staticmethod
+    def _empty_stats(engine: str, d: int, creation_ts: int) -> dict:
+        return {
+            "engine": engine, "inserts": 0, "overrides": 0, "noops": 0,
+            "creation_ts": int(creation_ts),
+            "touched_parts": np.empty(0, np.int64),
+            "touched_slots": np.empty(0, np.int64),
+            "touched_keys": np.empty(0, np.int64),
+            "touched_event_ts": np.empty(0, np.int64),
+            "touched_values": np.zeros((0, d), np.float32),
+        }
 
     def _merge_vector(
         self,
@@ -536,19 +608,32 @@ class OnlineStore:
 
         return self._batch_stats(
             plan.inserts, plan.overrides, plan.noops,
-            gpart[plan.beat], gslot[plan.beat], engine="kernel" if use_kernel else "vector",
+            gpart[plan.beat], gslot[plan.beat],
+            plan.uids[plan.beat], plan.winner_ev[plan.beat], wfeats[plan.beat],
+            creation_ts, engine="kernel" if use_kernel else "vector",
         )
 
     @staticmethod
-    def _batch_stats(ins, ovr, nop, tparts, tslots, *, engine) -> dict:
+    def _batch_stats(
+        ins, ovr, nop, tparts, tslots, tkeys, tev, tvals, creation_ts, *, engine
+    ) -> dict:
+        """Per-batch stats: Algorithm-2 tallies + the reduced winning writes.
+        ``touched_*`` arrays are parallel, sorted by (part, slot) — coords,
+        encoded key, winning event_ts, and feature row of every slot this
+        batch actually (re)wrote; with the shared ``creation_ts`` they are
+        the complete reduced batch geo-replication ships."""
         order = np.lexsort((tslots, tparts))
         return {
             "engine": engine,
             "inserts": int(ins),
             "overrides": int(ovr),
             "noops": int(nop),
+            "creation_ts": int(creation_ts),
             "touched_parts": np.asarray(tparts, np.int64)[order],
             "touched_slots": np.asarray(tslots, np.int64)[order],
+            "touched_keys": np.asarray(tkeys, np.int64)[order],
+            "touched_event_ts": np.asarray(tev, np.int64)[order],
+            "touched_values": np.asarray(tvals, np.float32)[order],
         }
 
     def _merge_loop(
@@ -629,7 +714,13 @@ class OnlineStore:
         self.noops += nop
         tp = np.array([c[0] for c in touched], np.int64)
         ts = np.array([c[1] for c in touched], np.int64)
-        return self._batch_stats(ins, ovr, nop, tp, ts, engine="loop")
+        # host planes are truth after a loop merge: the rows at the touched
+        # coords ARE the reduced winners this batch wrote
+        return self._batch_stats(
+            ins, ovr, nop, tp, ts,
+            t.keys_full[tp, ts], t.event_ts[tp, ts], t.values[tp, ts],
+            creation_ts, engine="loop",
+        )
 
     # -- reads ----------------------------------------------------------------
     def lookup(

@@ -18,7 +18,7 @@ that cannot be rebased fall back to the jnp oracle (see kernels/pit_join).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Sequence
 
 import jax.numpy as jnp
 import numpy as np

@@ -13,6 +13,20 @@ region access = collectives over ``pod``.  This module is the control plane:
 placement, replication policy, compliance fencing, health, fail-over, and a
 latency cost model so benchmarks can contrast the two mechanisms with the
 same numbers a WAN deployment would reason about.
+
+The geo-replication DATA plane lives in core/replication.py: every home
+``OnlineStore.merge`` appends its reduced winner rows to a ``ReplicationLog``
+(one monotone sequence, one cursor per replica), an async applier drains the
+log into replica stores, and ``GeoPlacement.failover`` here decides WHICH
+replica gets promoted — the nearest healthy one by this topology's latency
+model — after which the applier replays that replica's un-acked log suffix.
+Replay is safe because Algorithm 2 is an idempotent, commutative
+latest-wins join on (event_ts, creation_ts): re-delivered or reordered
+batches converge to the same store state.
+
+``GeoTopology`` supports per-link latency overrides (``link_latency_ms``)
+on top of the two-tier local/WAN default, so "nearest" is a real choice
+between replicas rather than a constant.
 """
 
 from __future__ import annotations
@@ -54,14 +68,38 @@ class Region:
 
 @dataclasses.dataclass
 class GeoTopology:
-    """Static latency/bandwidth model between regions (ICI vs DCN tiers)."""
+    """Static latency/bandwidth model between regions (ICI vs DCN tiers).
+
+    ``link_latency_ms`` optionally refines the flat WAN tier with symmetric
+    per-pair one-way latencies, e.g. ``{("westus2", "eastus"): 32.0}``;
+    pairs not listed fall back to ``cross_region_latency_ms``.
+    ``cross_region_gbps`` models WAN link bandwidth so replication shipping
+    cost can be charged per byte, not just per message."""
 
     regions: dict[str, Region]
     local_latency_ms: float = 1.0
     cross_region_latency_ms: float = 60.0
+    link_latency_ms: dict[tuple[str, str], float] = dataclasses.field(
+        default_factory=dict
+    )
+    cross_region_gbps: float = 1.0
 
     def latency(self, src: str, dst: str) -> float:
-        return self.local_latency_ms if src == dst else self.cross_region_latency_ms
+        if src == dst:
+            return self.local_latency_ms
+        for pair in ((src, dst), (dst, src)):
+            if pair in self.link_latency_ms:
+                return self.link_latency_ms[pair]
+        return self.cross_region_latency_ms
+
+    def transfer_ms(self, src: str, dst: str, nbytes: int) -> float:
+        """Modeled one-way shipping time for ``nbytes``: link latency plus
+        serialization at the WAN bandwidth (local transfers are free)."""
+        if src == dst:
+            return 0.0
+        return self.latency(src, dst) + nbytes * 8 / (
+            self.cross_region_gbps * 1e6
+        )
 
 
 class GeoPlacement:
@@ -97,14 +135,25 @@ class GeoPlacement:
             raise ValueError(f"unknown region {region}")
         self.replicas.add(region)
 
+    def remove_replica(self, region: str) -> None:
+        """Drop a region from the serving set — e.g. a failed ex-home whose
+        store was lost at promotion; it may rejoin later via add_replica."""
+        if region == self.home_region:
+            raise ValueError("cannot remove the home region")
+        self.replicas.discard(region)
+
     # -- routing ---------------------------------------------------------------
-    def route_read(self, consumer_region: str) -> tuple[str, float]:
+    def route_read(
+        self, consumer_region: str, candidates: Optional[list[str]] = None
+    ) -> tuple[str, float]:
         """Pick the serving region for a read issued from ``consumer_region``.
         Returns (region, modeled latency ms).  Raises RegionDownError when no
-        healthy serving region exists."""
-        candidates = [
-            r for r in self.replicas if self.topology.regions[r].healthy
-        ]
+        healthy serving region exists.  ``candidates`` optionally restricts
+        the serving set further (the geo data plane passes only IN-SYNC
+        replicas); health is always re-checked here."""
+        if candidates is None:
+            candidates = list(self.replicas)
+        candidates = [r for r in candidates if self.topology.regions[r].healthy]
         if not candidates:
             raise RegionDownError(
                 f"no healthy replica of store homed in {self.home_region}"
@@ -114,7 +163,7 @@ class GeoPlacement:
         else:
             serving = min(
                 candidates,
-                key=lambda r: self.topology.latency(consumer_region, r),
+                key=lambda r: (self.topology.latency(consumer_region, r), r),
             )
         ms = self.topology.latency(consumer_region, serving)
         self.read_log.append((consumer_region, serving, ms))
@@ -129,7 +178,15 @@ class GeoPlacement:
 
     def failover(self) -> Optional[str]:
         """If the home region is down, promote the nearest healthy replica to
-        primary.  Returns the new primary (or None if nothing to do)."""
+        primary — nearest by the topology's latency model from the FAILED
+        home (ties broken by name for determinism), so the promoted primary
+        keeps write traffic on the cheapest link once the region recovers.
+        Returns the new primary (or None if nothing to do).
+
+        This only re-points placement; the data-plane half of a fail-over —
+        replaying the promoted replica's un-acked replication-log suffix so
+        its store converges to the home's pre-failure state — is
+        ``GeoReplicator.promote`` (core/replication.py)."""
         if self.topology.regions[self.home_region].healthy:
             return None
         healthy = [
@@ -139,5 +196,8 @@ class GeoPlacement:
         ]
         if not healthy:
             raise RegionDownError("home region down and no healthy replica")
-        self.home_region = healthy[0]
+        prev = self.home_region
+        self.home_region = min(
+            healthy, key=lambda r: (self.topology.latency(prev, r), r)
+        )
         return self.home_region

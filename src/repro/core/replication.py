@@ -1,0 +1,567 @@
+"""Async geo-replication of online merge batches (paper §2.1, §4.1.2 road map).
+
+The paper's implemented mechanism keeps an asset in its creation region and
+pays WAN latency on every remote read; its road-map mechanism replicates the
+asset into consumer regions so reads are local.  This module is that road-map
+mechanism made concrete for the online store, built on the shipping unit PR 2
+created: every ``OnlineStore.merge`` already reduces a materialization frame
+to the winning writes it actually applied (encoded key, winning event_ts,
+feature row, one shared creation_ts) and reports them in its stats.
+
+Log / cursor / replay protocol
+------------------------------
+``ReplicationLog`` is a bounded, totally-ordered sequence of those reduced
+batches, appended by a listener on the home store's ``merge_listeners``.
+Each replica owns a CURSOR: the lowest sequence number it has not yet
+acknowledged.  The async applier (``GeoReplicator.drain``) ships pending
+batches over the modeled WAN link and applies them to the replica store via
+``OnlineStore.merge_reduced`` — the same Algorithm-2 engines the home store
+runs.  Acknowledgements may arrive out of order (``apply_batch``); the
+cursor only advances over the contiguous acknowledged prefix, so lag
+accounting never under-reports.  ``truncate`` drops exactly the prefix below
+EVERY cursor — an un-acked batch is never dropped; when the log is full and
+no prefix is fully acknowledged, ``append`` raises ``ReplicationLogFull``
+(backpressure) instead of losing data.  The PUBLISHER must never lose a
+batch either (the home store has already applied it when the listener
+fires), so under backpressure the replicator first degrades to a
+synchronous drain of every healthy replica, and only if a dead replica
+still pins the tail does it force-append past capacity — bounded growth
+plus a monitor counter, never divergence.
+
+Everything relies on Algorithm 2 being an idempotent, commutative,
+latest-wins join on (event_ts, creation_ts): re-delivering a batch is a
+no-op, reordered batches converge to the same store state, and replaying a
+suffix that partially overlaps already-applied writes is safe.  That is what
+makes fail-over exactly-once in EFFECT with at-least-once DELIVERY:
+``GeoPlacement.failover`` picks the nearest healthy replica (regions.py),
+then ``GeoReplicator.promote`` replays that replica's un-acked suffix,
+leaving its store byte-identical to the home store's pre-failure state.
+
+``GeoFeatureStore`` is the read/write router on top: writes (materialization
+ticks, backfills) go to the home region's ``FeatureStore``; online reads are
+served by the nearest IN-SYNC replica (replication lag at most
+``max_lag_batches``), falling back to the home store; per-replica lag /
+staleness land in the health monitor.  Geo-fenced home regions refuse
+replication (``ComplianceError``, §4.1.2) exactly as placement does.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.assets import FeatureSetSpec
+from repro.core.featurestore import FeatureStore
+from repro.core.offline_store import CREATION_TS, EVENT_TS
+from repro.core.online_store import OnlineStore
+from repro.core.regions import GeoTopology, RegionDownError, ReplicationPolicy
+
+__all__ = [
+    "GeoFeatureStore",
+    "GeoReplicator",
+    "ReplicatedBatch",
+    "ReplicationLog",
+    "ReplicationLogFull",
+]
+
+
+class ReplicationLogFull(RuntimeError):
+    """The log hit capacity and no fully-acknowledged prefix can be
+    truncated — backpressure instead of dropping un-acked batches."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicatedBatch:
+    """One reduced merge batch: the winning writes a single home-store merge
+    applied, in (part, slot) order as the home store reported them."""
+
+    seq: int
+    table: tuple[str, int]
+    creation_ts: int
+    keys: np.ndarray  # (G,) int64 encoded entity keys
+    event_ts: np.ndarray  # (G,) int64 winning event_ts per key
+    values: np.ndarray  # (G, D) float32 winning feature rows
+
+    @property
+    def rows(self) -> int:
+        return len(self.keys)
+
+    @property
+    def nbytes(self) -> int:
+        return self.keys.nbytes + self.event_ts.nbytes + self.values.nbytes
+
+
+class ReplicationLog:
+    """Bounded sequence of reduced batches + one cursor per replica.
+
+    A cursor is the lowest un-acknowledged sequence number; acks may land
+    out of order, and the cursor advances only over the contiguous prefix.
+    """
+
+    def __init__(self, capacity: int = 1024) -> None:
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self.next_seq = 0
+        self.cursors: dict[str, int] = {}
+        self._batches: deque[ReplicatedBatch] = deque()
+        self._acked_ahead: dict[str, set[int]] = {}
+
+    def __len__(self) -> int:
+        return len(self._batches)
+
+    def register_replica(self, name: str, from_seq: Optional[int] = None) -> int:
+        """Start tracking a replica.  By default its cursor starts at the
+        current head — the caller is responsible for snapshot-bootstrapping
+        state appended before registration."""
+        cursor = self.next_seq if from_seq is None else from_seq
+        self.cursors[name] = cursor
+        self._acked_ahead[name] = set()
+        return cursor
+
+    def drop_replica(self, name: str) -> None:
+        self.cursors.pop(name, None)
+        self._acked_ahead.pop(name, None)
+
+    def pending_count(self, replica: str) -> int:
+        """O(1) un-acked batch count — the serving path's in-sync gate."""
+        ahead = len(self._acked_ahead[replica])
+        return self.next_seq - self.cursors[replica] - ahead
+
+    def append(
+        self,
+        table: tuple[str, int],
+        creation_ts: int,
+        keys: np.ndarray,
+        event_ts: np.ndarray,
+        values: np.ndarray,
+        *,
+        force: bool = False,
+    ) -> ReplicatedBatch:
+        """Append one reduced batch; truncates the fully-acked prefix first
+        and raises ``ReplicationLogFull`` rather than evicting un-acked
+        batches when the log is still at capacity.  ``force=True`` appends
+        past capacity instead of raising — for a publisher whose store
+        ALREADY applied the batch, losing it is worse than growing the log
+        (see GeoReplicator._on_home_merge)."""
+        if len(self._batches) >= self.capacity:
+            self.truncate()
+        if len(self._batches) >= self.capacity and not force:
+            slowest = min(self.cursors.values(), default=None)
+            msg = f"log at capacity {self.capacity}; slowest cursor {slowest}"
+            raise ReplicationLogFull(msg)
+        batch = ReplicatedBatch(
+            seq=self.next_seq,
+            table=table,
+            creation_ts=int(creation_ts),
+            keys=np.asarray(keys, np.int64),
+            event_ts=np.asarray(event_ts, np.int64),
+            values=np.asarray(values, np.float32),
+        )
+        self.next_seq += 1
+        self._batches.append(batch)
+        return batch
+
+    def pending(self, replica: str) -> list[ReplicatedBatch]:
+        """Batches the replica has not acknowledged, in sequence order."""
+        cursor = self.cursors[replica]
+        ahead = self._acked_ahead[replica]
+        return [b for b in self._batches if b.seq >= cursor and b.seq not in ahead]
+
+    def ack(self, replica: str, seq: int) -> None:
+        """Acknowledge one batch; the cursor advances over the contiguous
+        acknowledged prefix only, so out-of-order acks never hide lag."""
+        if seq >= self.next_seq:
+            raise ValueError(f"ack of unknown seq {seq}")
+        ahead = self._acked_ahead[replica]
+        if seq >= self.cursors[replica]:
+            ahead.add(seq)
+        while self.cursors[replica] in ahead:
+            ahead.remove(self.cursors[replica])
+            self.cursors[replica] += 1
+
+    def truncate(self) -> int:
+        """Drop the prefix every replica has acknowledged.  Never touches a
+        batch at or above any cursor, so un-acked batches survive.  Returns
+        the number of batches dropped."""
+        floor = min(self.cursors.values(), default=self.next_seq)
+        dropped = 0
+        while self._batches and self._batches[0].seq < floor:
+            self._batches.popleft()
+            dropped += 1
+        return dropped
+
+    def lag(self, replica: str) -> dict:
+        """Un-acked batch/row counts and the oldest pending creation_ts."""
+        pend = self.pending(replica)
+        return {
+            "batches": len(pend),
+            "rows": int(sum(b.rows for b in pend)),
+            "oldest_pending_creation_ts": (
+                min(b.creation_ts for b in pend) if pend else None
+            ),
+        }
+
+
+class GeoReplicator:
+    """Async applier: drains the home store's replication log into replica
+    stores over the modeled WAN, tracks lag, and replays on fail-over."""
+
+    def __init__(
+        self,
+        home_store: OnlineStore,
+        *,
+        topology: GeoTopology,
+        home_region: str,
+        log: Optional[ReplicationLog] = None,
+        clock: Optional[Callable[[], int]] = None,
+        monitor=None,
+    ) -> None:
+        self.topology = topology
+        self.home_region = home_region
+        self.log = log if log is not None else ReplicationLog()
+        self.clock = clock or (lambda: 0)
+        self.monitor = monitor
+        self.stores: dict[str, OnlineStore] = {home_region: home_store}
+        self.shipped: dict[str, dict] = {}
+        self._specs: dict[tuple[str, int], FeatureSetSpec] = {}
+        home_store.merge_listeners.append(self._on_home_merge)
+
+    # -- publish (home side) ------------------------------------------------
+    def _on_home_merge(self, spec: FeatureSetSpec, stats: dict) -> None:
+        """Home-store merge listener: append the batch's reduced winning
+        writes to the log and annotate the stats with the assigned seq.
+
+        The home store has ALREADY applied this batch by the time the
+        listener fires, so the append must never lose it: when the log is
+        full, backpressure degrades async replication to a synchronous
+        drain of every healthy replica (advancing their cursors frees the
+        prefix); if an UNHEALTHY replica still pins the tail, the batch is
+        force-appended — the log temporarily exceeds capacity (surfaced via
+        the ``replication/log_force_appends`` counter) rather than
+        diverging the replicas forever."""
+        self._specs[spec.key] = spec
+        keys = stats.get("touched_keys")
+        if keys is None or len(keys) == 0:
+            stats["replication_seq"] = None  # pure no-op batch: nothing ships
+            return
+        payload = (
+            spec.key,
+            stats["creation_ts"],
+            keys,
+            stats["touched_event_ts"],
+            stats["touched_values"],
+        )
+        try:
+            batch = self.log.append(*payload)
+        except ReplicationLogFull:
+            for region in self.replica_regions():
+                if self.topology.regions[region].healthy:
+                    self.drain(region)
+            try:
+                batch = self.log.append(*payload)
+            except ReplicationLogFull:
+                batch = self.log.append(*payload, force=True)
+                if self.monitor is not None:
+                    self.monitor.system.inc("replication/log_force_appends")
+        stats["replication_seq"] = batch.seq
+
+    # -- replica membership --------------------------------------------------
+    def replica_regions(self) -> list[str]:
+        return [r for r in self.stores if r != self.home_region]
+
+    def add_replica(self, region: str, store: OnlineStore) -> None:
+        if region in self.stores:
+            raise ValueError(f"region {region} already has a store")
+        self.stores[region] = store
+        self.log.register_replica(region)
+        self.shipped[region] = {"batches": 0, "rows": 0, "bytes": 0, "ms": 0.0}
+
+    def bootstrap_snapshot(self, region: str, spec: FeatureSetSpec) -> int:
+        """Copy one table's CURRENT home state into a new replica — the
+        §4.5.5-style bootstrap for replicas added after data exists.  The
+        dump is replayed as reduced batches grouped by creation_ts (a
+        ``merge_reduced`` batch shares one creation_ts); overlap with
+        batches already in the log is safe by idempotence."""
+        home = self.stores[self.home_region]
+        store = self.stores[region]
+        dump = home.dump_all(spec.name, spec.version)
+        if len(dump) == 0:
+            store.register(spec)
+            return 0
+        keys = dump["__key__"]
+        event_ts = dump[EVENT_TS]
+        creation_ts = dump[CREATION_TS]
+        values = dump.column_stack([f.name for f in spec.features], np.float32)
+        for cr in np.unique(creation_ts):
+            m = creation_ts == cr
+            store.merge_reduced(spec, keys[m], event_ts[m], values[m], int(cr))
+        return len(keys)
+
+    # -- apply (replica side) -------------------------------------------------
+    def apply_batch(self, region: str, batch: ReplicatedBatch) -> dict:
+        """Ship + apply ONE batch to a replica and acknowledge it.  Exposed
+        so tests can drive out-of-order delivery; ``drain`` is the in-order
+        fast path."""
+        spec = self._specs[batch.table]
+        stats = self.stores[region].merge_reduced(
+            spec, batch.keys, batch.event_ts, batch.values, batch.creation_ts
+        )
+        self.log.ack(region, batch.seq)
+        ship = self.shipped[region]
+        ship["batches"] += 1
+        ship["rows"] += batch.rows
+        ship["bytes"] += batch.nbytes
+        ship["ms"] += self.topology.transfer_ms(self.home_region, region, batch.nbytes)
+        if self.monitor is not None:
+            self.monitor.record_replication_ship(batch.nbytes, batch.rows)
+        return stats
+
+    def drain(
+        self, region: Optional[str] = None, max_batches: Optional[int] = None
+    ) -> dict:
+        """Apply pending batches in sequence order — all replicas or one.
+        Returns {region: {"applied_batches", "applied_rows"}}."""
+        regions = [region] if region is not None else self.replica_regions()
+        out: dict[str, dict] = {}
+        for r in regions:
+            pend = self.log.pending(r)
+            if max_batches is not None:
+                pend = pend[:max_batches]
+            rows = 0
+            for batch in pend:
+                self.apply_batch(r, batch)
+                rows += batch.rows
+            out[r] = {"applied_batches": len(pend), "applied_rows": rows}
+            self._record_lag(r)
+        self.log.truncate()
+        return out
+
+    # -- lag accounting --------------------------------------------------------
+    def lag_batches(self, region: str) -> int:
+        """O(1) un-acked batch count — cheap enough for the read hot path
+        (the full ``lag`` scans the log for rows/staleness; monitoring
+        cadence only)."""
+        if region == self.home_region:
+            return 0
+        return self.log.pending_count(region)
+
+    def lag(self, region: str) -> dict:
+        """Replication lag of one region: un-acked batches/rows plus
+        staleness in clock units (0 when fully caught up).  The home region
+        is by definition in sync."""
+        if region == self.home_region:
+            return {"batches": 0, "rows": 0, "staleness_ms": 0}
+        raw = self.log.lag(region)
+        oldest = raw.pop("oldest_pending_creation_ts")
+        raw["staleness_ms"] = (
+            max(0, int(self.clock()) - oldest) if oldest is not None else 0
+        )
+        return raw
+
+    def _record_lag(self, region: str) -> None:
+        if self.monitor is not None:
+            self.monitor.record_replication_lag(region, **self.lag(region))
+
+    # -- fail-over replay -------------------------------------------------------
+    def promote(self, region: str) -> dict:
+        """Data-plane half of fail-over: replay the promoted replica's
+        un-acked log suffix into its store (Algorithm-2 idempotence makes
+        any overlap with already-applied batches a no-op), then make it the
+        new home — its merges now feed the log for the remaining replicas,
+        whose cursors carry over untouched."""
+        if region == self.home_region:
+            return {"replayed_batches": 0, "replayed_rows": 0}
+        if region not in self.stores:
+            raise RegionDownError(f"no replica store in {region}")
+        replay = self.drain(region)[region]
+        old_home = self.stores[self.home_region]
+        try:
+            old_home.merge_listeners.remove(self._on_home_merge)
+        except ValueError:
+            pass
+        del self.stores[self.home_region]
+        self.log.drop_replica(region)
+        self.shipped.pop(region, None)
+        self.home_region = region
+        self.stores[region].merge_listeners.append(self._on_home_merge)
+        return {
+            "replayed_batches": replay["applied_batches"],
+            "replayed_rows": replay["applied_rows"],
+        }
+
+
+class GeoFeatureStore:
+    """Read/write router over a home ``FeatureStore`` plus geo-replicated
+    online serving replicas.
+
+    Writes (materialization ticks, backfills, direct merges) always land in
+    the home region; a listener streams every online merge's reduced batch
+    into the replication log.  Online reads route to the nearest IN-SYNC
+    region (lag <= ``max_lag_batches``), preferring the consumer's own
+    region — the paper's local-read latency win.  ``failover`` composes the
+    placement decision (nearest healthy replica) with the log replay that
+    makes the promoted store byte-identical to the lost home.
+    """
+
+    def __init__(
+        self,
+        name: str,
+        *,
+        topology: GeoTopology,
+        home_region: str,
+        replica_regions: tuple[str, ...] = (),
+        max_lag_batches: int = 0,
+        log_capacity: int = 1024,
+        auto_drain: bool = False,
+        **fs_kwargs,
+    ) -> None:
+        self.fs = FeatureStore(
+            name,
+            region=home_region,
+            topology=topology,
+            replication=ReplicationPolicy.GEO_REPLICATED,
+            **fs_kwargs,
+        )
+        self.topology = topology
+        self.placement = self.fs.geo
+        self.max_lag_batches = max_lag_batches
+        self.auto_drain = auto_drain
+        self.log = ReplicationLog(capacity=log_capacity)
+        self.replicator = GeoReplicator(
+            self.fs.online,
+            topology=topology,
+            home_region=home_region,
+            log=self.log,
+            clock=self.fs.clock,
+            monitor=self.fs.monitor,
+        )
+        self.fs.attach_replication(self.replicator)
+        for region in replica_regions:
+            self.add_replica(region)
+
+    @property
+    def home_region(self) -> str:
+        return self.replicator.home_region
+
+    def __getattr__(self, name: str):
+        # registry/asset/materialization surface delegates to the home store
+        return getattr(self.fs, name)
+
+    # -- membership ----------------------------------------------------------
+    def add_replica(self, region: str) -> OnlineStore:
+        """Create an online serving replica in ``region``: compliance-check
+        placement, clone the home store's configuration, snapshot-bootstrap
+        every online table, and start cursor-tracking new batches."""
+        self.placement.add_replica(region)  # ComplianceError when geo-fenced
+        home = self.fs.online
+        store = OnlineStore(
+            num_partitions=home.num_partitions,
+            initial_capacity=home.initial_capacity,
+            interpret=home.interpret,
+            merge_engine=home.merge_engine,
+        )
+        self.replicator.add_replica(region, store)
+        for n, v in self.fs.registry.list_feature_sets():
+            spec = self.fs.registry.get_feature_set(n, v)
+            if spec.materialization.online_enabled and home.has(n, v):
+                self.replicator.bootstrap_snapshot(region, spec)
+        return store
+
+    # -- asset management ------------------------------------------------------
+    def create_feature_set(self, spec: FeatureSetSpec) -> FeatureSetSpec:
+        """Register with the home store, then pre-register the (empty) table
+        on every replica so a relaxed-staleness read can serve before the
+        first batch arrives."""
+        spec = self.fs.create_feature_set(spec)
+        if spec.materialization.online_enabled:
+            for region in self.replicator.replica_regions():
+                self.replicator.stores[region].register(spec)
+        return spec
+
+    # -- writes (home region) -------------------------------------------------
+    def tick(self, now: Optional[int] = None) -> dict[str, int]:
+        stats = self.fs.tick(now)
+        if self.auto_drain:
+            self.drain()
+        return stats
+
+    def backfill(self, name: str, version: int, start: int, end: int) -> dict:
+        stats = self.fs.backfill(name, version, start, end)
+        if self.auto_drain:
+            self.drain()
+        return stats
+
+    def drain(self, region: Optional[str] = None) -> dict:
+        return self.replicator.drain(region)
+
+    def lag(self, region: str) -> dict:
+        return self.replicator.lag(region)
+
+    # -- reads (nearest in-sync region) ----------------------------------------
+    def route_read(
+        self, consumer_region: str, *, max_lag_batches: Optional[int] = None
+    ) -> tuple[str, float]:
+        """Pick the serving region for ``consumer_region``: the consumer's
+        own region when it hosts an in-sync healthy store, else the
+        nearest in-sync healthy one (home is always in sync).  The sync
+        gate is an O(1) cursor-distance check; nearest-healthy selection
+        and read-log bookkeeping delegate to placement.  Returns (region,
+        modeled one-way latency ms)."""
+        max_lag = self.max_lag_batches if max_lag_batches is None else max_lag_batches
+        rep = self.replicator
+        in_sync = [r for r in rep.stores if rep.lag_batches(r) <= max_lag]
+        return self.placement.route_read(consumer_region, candidates=in_sync)
+
+    def get_online_features(
+        self,
+        name: str,
+        version: int,
+        id_columns: list[np.ndarray],
+        *,
+        consumer_region: Optional[str] = None,
+        use_kernel: bool = True,
+        max_lag_batches: Optional[int] = None,
+    ) -> tuple[np.ndarray, np.ndarray, dict]:
+        """Geo-routed online GET.  Returns (values, found, route) where
+        ``route`` records the serving region and the modeled latency the
+        read paid — the number the geo benchmark contrasts across
+        mechanisms."""
+        consumer = consumer_region or self.home_region
+        serving, ms = self.route_read(consumer, max_lag_batches=max_lag_batches)
+        vals, found = self.replicator.stores[serving].lookup(
+            name, version, id_columns, now=self.fs.clock(), use_kernel=use_kernel
+        )
+        self.fs.monitor.system.observe("geo/read_modeled_ms", ms)
+        return vals, found, {"region": serving, "modeled_ms": ms}
+
+    # -- failure handling --------------------------------------------------------
+    def mark_down(self, region: str) -> None:
+        self.placement.mark_down(region)
+
+    def mark_up(self, region: str) -> None:
+        self.placement.mark_up(region)
+
+    def failover(self) -> Optional[dict]:
+        """Promote the nearest healthy replica when the home region is down:
+        placement re-points (regions.py), the replicator replays the
+        promoted replica's un-acked suffix, and the home ``FeatureStore``
+        adopts the promoted store as its online plane — so materialization
+        resumes against the new primary.  The dead ex-home leaves the
+        serving set entirely (its store is gone; a LATER failover must
+        never promote it) — if it recovers, ``add_replica`` re-admits it
+        via snapshot bootstrap.  Returns promotion info, or None when the
+        home region is healthy."""
+        old_home = self.home_region
+        new_home = self.placement.failover()
+        if new_home is None:
+            return None
+        replay = self.replicator.promote(new_home)
+        self.placement.remove_replica(old_home)
+        promoted = self.replicator.stores[new_home]
+        self.fs.online = promoted
+        self.fs.materializer.online = promoted
+        return {"promoted": new_home, **replay}

@@ -31,7 +31,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import json
-from typing import Callable, Optional
+from typing import Optional
 
 from repro.core.transform import FeatureWindow
 

@@ -17,7 +17,6 @@ Determinism & distribution:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import numpy as np
 

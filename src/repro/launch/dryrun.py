@@ -28,10 +28,9 @@ import traceback
 from pathlib import Path
 
 import jax
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs import get_config, list_archs
+from repro.configs import list_archs
 from repro.configs.shapes import SHAPES, LONG_CTX_ARCHS, cells_for
 from repro.launch import roofline as rf
 from repro.launch.mesh import make_production_mesh

@@ -9,7 +9,6 @@ allocating it).
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -10,7 +10,6 @@ MODEL_FLOPS = 6·N(active)·D term.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 __all__ = ["ModelConfig", "LayerKind"]
 

@@ -10,12 +10,11 @@ sinusoidal encoder positions, GELU MLPs, tied embedding/output head.
 from __future__ import annotations
 
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.attention import _project_qkv, _sdpa, cross_attn_init, make_mask
+from repro.models.attention import _sdpa, make_mask
 from repro.models.config import ModelConfig
 from repro.models.layers import dense_init, layer_norm, mlp_apply, mlp_init
 from repro.models.losses import next_token_loss

@@ -20,8 +20,7 @@ the block; the §Perf log iterates on the policy).
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -43,11 +43,9 @@ when capacity binds.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map

@@ -19,7 +19,6 @@ from __future__ import annotations
 
 import contextlib
 import contextvars
-from typing import Optional
 
 import jax
 import numpy as np

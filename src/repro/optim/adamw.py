@@ -15,7 +15,6 @@ sharding (moments/quantized moments are elementwise-shaped).
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax

@@ -24,7 +24,7 @@ which ``pod_allreduce_compressed`` provides.
 
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

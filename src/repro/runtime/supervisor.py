@@ -17,7 +17,7 @@ from typing import Callable, Optional
 
 from repro.core.materializer import Materializer
 from repro.core.monitoring import HealthMonitor
-from repro.core.scheduler import JobState, MaterializationJob, Scheduler
+from repro.core.scheduler import Scheduler
 
 __all__ = ["Supervisor", "SpeculativeExecutor", "WorkerPool"]
 

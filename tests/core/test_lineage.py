@@ -1,6 +1,5 @@
 """§4.6 feature-model lineage: scale + cross-region queries."""
 
-import numpy as np
 
 from repro.core.lineage import LineageGraph, ModelNode
 

@@ -1,6 +1,5 @@
 """§2.1/§3.1.2 health monitoring: metrics, alerts, staleness SLA."""
 
-import numpy as np
 
 from repro.core.monitoring import HealthMonitor, Metrics
 

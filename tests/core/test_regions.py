@@ -60,6 +60,36 @@ def test_failover_promotes_and_restores():
     assert geo.failover() is None  # healthy home: nothing to do
 
 
+def test_failover_prefers_nearest_healthy_replica():
+    """The docstring's promise, kept: promotion follows the topology's
+    latency model (with per-link overrides), not replica-set order."""
+    topo = GeoTopology(
+        regions={r: Region(r) for r in ("home", "near", "far")},
+        local_latency_ms=1.0,
+        cross_region_latency_ms=60.0,
+        link_latency_ms={("home", "near"): 20.0, ("home", "far"): 90.0},
+    )
+    geo = GeoPlacement(topo, "home", ReplicationPolicy.GEO_REPLICATED)
+    geo.add_replica("far")
+    geo.add_replica("near")
+    geo.mark_down("home")
+    assert geo.failover() == "near"
+    # symmetric link lookup: (near, far) falls back to the WAN default
+    assert topo.latency("far", "home") == 90.0
+    assert topo.latency("near", "far") == 60.0
+
+
+def test_topology_transfer_cost_model():
+    topo = GeoTopology(
+        regions={r: Region(r) for r in ("a", "b")},
+        cross_region_latency_ms=50.0,
+        cross_region_gbps=1.0,
+    )
+    assert topo.transfer_ms("a", "a", 10**9) == 0.0  # local ships are free
+    # 1 MB over a 1 Gbps WAN link: 50 ms latency + 8 ms serialization
+    assert topo.transfer_ms("a", "b", 10**6) == pytest.approx(58.0)
+
+
 def test_no_healthy_replica_raises():
     geo = GeoPlacement(_topo(), "home", ReplicationPolicy.CROSS_REGION_ACCESS)
     geo.mark_down("home")

@@ -1,0 +1,436 @@
+"""Async geo-replication (ISSUE 3 tentpole): log/cursor/replay protocol.
+
+The properties under test are the ones the protocol's safety rests on:
+
+  * ``merge_reduced`` replays of shipped batches rebuild byte-identical
+    store state — including under re-delivery and out-of-order delivery
+    (Algorithm-2 latest-wins is an idempotent commutative join);
+  * the log's cursors never under-report lag (out-of-order acks advance
+    only the contiguous prefix) and truncation never drops un-acked
+    batches (backpressure raises instead);
+  * the router serves local reads from in-sync replicas only, and
+    ``failover`` replays the promoted replica's un-acked suffix so its
+    store matches the home store's pre-failure state exactly;
+  * geo-fenced home regions refuse replication (§4.1.2 compliance).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.assets import (
+    Entity,
+    Feature,
+    FeatureSetSpec,
+    MaterializationSettings,
+)
+from repro.core.dsl import DslTransform, RollingAgg, UDFTransform
+from repro.core.online_store import OnlineStore
+from repro.core.regions import ComplianceError, GeoTopology, Region, RegionDownError
+from repro.core.replication import (
+    GeoFeatureStore,
+    ReplicationLog,
+    ReplicationLogFull,
+)
+from repro.core.table import Table
+from repro.data.sources import SyntheticEventSource
+
+HOUR = 3_600_000
+
+
+def make_spec(n_feats=2):
+    return FeatureSetSpec(
+        name="fs",
+        version=1,
+        entity=Entity("cust", ("entity_id",)),
+        features=tuple(Feature(f"f{i}") for i in range(n_feats)),
+        source_name="src",
+        transform=UDFTransform(lambda df, ctx: df, name="id"),
+        materialization=MaterializationSettings(True, True),
+    )
+
+
+def make_frame(rng, n, id_hi, ev_hi, n_feats=2):
+    cols = {
+        "entity_id": rng.integers(0, id_hi, n).astype(np.int64),
+        "ts": rng.integers(0, ev_hi, n).astype(np.int64),
+    }
+    for i in range(n_feats):
+        cols[f"f{i}"] = rng.random(n).astype(np.float32)
+    return Table(cols)
+
+
+def assert_dumps_identical(a: OnlineStore, b: OnlineStore, spec, ctx=""):
+    da, db = a.dump_all(spec.name, spec.version), b.dump_all(spec.name, spec.version)
+    assert set(da.names) == set(db.names), ctx
+    for name in da.names:
+        np.testing.assert_array_equal(da[name], db[name], err_msg=f"{ctx}: {name}")
+
+
+def topo(fenced_home=False):
+    return GeoTopology(
+        regions={
+            "home": Region("home", geo_fenced=fenced_home),
+            "near": Region("near"),
+            "far": Region("far"),
+        },
+        local_latency_ms=1.0,
+        cross_region_latency_ms=60.0,
+        link_latency_ms={("home", "near"): 30.0, ("home", "far"): 90.0},
+    )
+
+
+def geo_store(**kw):
+    kw.setdefault("topology", topo())
+    kw.setdefault("home_region", "home")
+    g = GeoFeatureStore("geo", **kw)
+    g.register_source(SyntheticEventSource("tx", num_entities=40))
+    g.create_feature_set(
+        FeatureSetSpec(
+            name="act",
+            version=1,
+            entity=Entity("customer", ("entity_id",)),
+            features=(Feature("s2", "float32"),),
+            source_name="tx",
+            transform=DslTransform(
+                "entity_id", "ts", [RollingAgg("s2", "amount", 2 * HOUR, "sum")]
+            ),
+            timestamp_col="ts",
+            source_lookback=2 * HOUR,
+            materialization=MaterializationSettings(
+                offline_enabled=True, online_enabled=True, schedule_interval=HOUR
+            ),
+        )
+    )
+    return g
+
+
+# -- merge stats carry the reduced batch --------------------------------------
+
+
+@pytest.mark.parametrize("engine", ["loop", "vector", "kernel"])
+def test_merge_stats_reduced_rows_match_store_state(engine):
+    """touched_* arrays must be exactly the rows the merge wrote: replaying
+    them alone into a fresh store rebuilds identical state."""
+    spec = make_spec()
+    src = OnlineStore(num_partitions=4, merge_engine=engine)
+    dst = OnlineStore(num_partitions=4, merge_engine=engine)
+    rng = np.random.default_rng(0)
+    for i in range(4):
+        stats = src.merge(spec, make_frame(rng, 80, 30, 50 * (i + 1)), 1_000 + i)
+        assert stats["creation_ts"] == 1_000 + i
+        # touched_* are per-SLOT (one winner per unique id); the tallies are
+        # per-ROW, so duplicates make them an upper bound
+        n_touched = len(stats["touched_parts"])
+        assert n_touched <= stats["inserts"] + stats["overrides"]
+        assert len(stats["touched_keys"]) == n_touched
+        assert len(stats["touched_event_ts"]) == n_touched
+        assert stats["touched_values"].shape == (n_touched, 2)
+        dst.merge_reduced(
+            spec,
+            stats["touched_keys"],
+            stats["touched_event_ts"],
+            stats["touched_values"],
+            stats["creation_ts"],
+        )
+    assert_dumps_identical(src, dst, spec, f"reduced replay ({engine})")
+
+
+@pytest.mark.parametrize("engine", ["loop", "vector", "kernel"])
+def test_replay_idempotent_and_order_independent(engine):
+    """Re-delivered and reordered reduced batches converge to the state a
+    fresh in-order rebuild produces — the property failover replay rests
+    on."""
+    spec = make_spec()
+    home = OnlineStore(num_partitions=4)
+    rng = np.random.default_rng(1)
+    batches = []
+    for i in range(6):
+        stats = home.merge(spec, make_frame(rng, 60, 25, 40 * (i + 1)), 2_000 + i)
+        batches.append(stats)
+    fresh = OnlineStore(num_partitions=4, merge_engine=engine)
+    for s in batches:
+        fresh.merge_reduced(
+            spec,
+            s["touched_keys"],
+            s["touched_event_ts"],
+            s["touched_values"],
+            s["creation_ts"],
+        )
+    chaotic = OnlineStore(num_partitions=4, merge_engine=engine)
+    order = [3, 0, 5, 1, 4, 2, 3, 0, 5, 1, 4, 2, 2]  # shuffled + re-delivered
+    for i in order:
+        s = batches[i]
+        chaotic.merge_reduced(
+            spec,
+            s["touched_keys"],
+            s["touched_event_ts"],
+            s["touched_values"],
+            s["creation_ts"],
+        )
+    assert_dumps_identical(home, fresh, spec, "fresh rebuild")
+    assert_dumps_identical(fresh, chaotic, spec, f"chaotic replay ({engine})")
+
+
+# -- log: cursors, out-of-order acks, truncation safety -----------------------
+
+
+def _log_batch(log, seq_hint=0):
+    return log.append(
+        ("fs", 1),
+        1_000 + seq_hint,
+        np.arange(3, dtype=np.int64),
+        np.arange(3, dtype=np.int64),
+        np.zeros((3, 1), np.float32),
+    )
+
+
+def test_log_lag_under_out_of_order_acks():
+    log = ReplicationLog()
+    log.register_replica("r")
+    for i in range(4):
+        _log_batch(log, i)
+    assert log.lag("r") == {
+        "batches": 4,
+        "rows": 12,
+        "oldest_pending_creation_ts": 1_000,
+    }
+    log.ack("r", 2)  # out of order: cursor must NOT advance
+    assert log.cursors["r"] == 0
+    assert log.lag("r")["batches"] == 3
+    assert [b.seq for b in log.pending("r")] == [0, 1, 3]
+    log.ack("r", 0)  # contiguous prefix {0} + ahead {2}: cursor -> 1
+    assert log.cursors["r"] == 1
+    log.ack("r", 1)  # closes the gap: cursor jumps over the acked 2
+    assert log.cursors["r"] == 3
+    assert log.lag("r") == {
+        "batches": 1,
+        "rows": 3,
+        "oldest_pending_creation_ts": 1_003,
+    }
+    log.ack("r", 3)
+    assert log.lag("r")["batches"] == 0
+    # re-acking below the cursor is a harmless no-op (re-delivery)
+    log.ack("r", 1)
+    assert log.cursors["r"] == 4
+
+
+def test_log_truncation_never_drops_unacked():
+    log = ReplicationLog(capacity=4)
+    log.register_replica("fast")
+    log.register_replica("slow")
+    for i in range(4):
+        _log_batch(log, i)
+    for i in range(4):
+        log.ack("fast", i)
+    assert log.truncate() == 0  # slow still holds the whole window
+    assert [b.seq for b in log.pending("slow")] == [0, 1, 2, 3]
+    with pytest.raises(ReplicationLogFull):
+        _log_batch(log, 4)  # backpressure, not data loss
+    assert [b.seq for b in log.pending("slow")] == [0, 1, 2, 3]
+    log.ack("slow", 0)
+    log.ack("slow", 1)
+    _log_batch(log, 4)  # append now truncates exactly the acked prefix
+    assert [b.seq for b in log.pending("slow")] == [2, 3, 4]
+    assert [b.seq for b in log.pending("fast")] == [4]
+
+
+def test_log_unregistered_replica_truncates_everything():
+    log = ReplicationLog(capacity=2)
+    _log_batch(log, 0)
+    _log_batch(log, 1)
+    _log_batch(log, 2)  # no cursors: acked-by-all is vacuously true
+    assert len(log) <= 2
+
+
+# -- geo feature store: routing, lag gating, compliance -----------------------
+
+
+def test_geo_fenced_home_refuses_replication():
+    g = GeoFeatureStore("geo", topology=topo(fenced_home=True), home_region="home")
+    with pytest.raises(ComplianceError):
+        g.add_replica("near")
+
+
+def test_reads_gate_on_replication_lag():
+    g = geo_store(replica_regions=("near",))
+    g.tick(now=2 * HOUR)
+    ids = [np.arange(10, dtype=np.int64)]
+    # replica lags: reads from 'near' must fall back to home (WAN latency)
+    assert g.lag("near")["batches"] > 0
+    _, _, route = g.get_online_features("act", 1, ids, consumer_region="near")
+    assert route == {"region": "home", "modeled_ms": 30.0}
+    # relaxing the staleness bound lets the lagging replica serve locally
+    _, _, relaxed = g.get_online_features(
+        "act", 1, ids, consumer_region="near", max_lag_batches=10
+    )
+    assert relaxed["region"] == "near"
+    g.drain()
+    vals_home, found_home, _ = g.get_online_features("act", 1, ids)
+    vals, found, route = g.get_online_features("act", 1, ids, consumer_region="near")
+    assert route == {"region": "near", "modeled_ms": 1.0}  # local read
+    np.testing.assert_array_equal(found, found_home)
+    np.testing.assert_array_equal(vals, vals_home)
+
+
+def test_lag_metrics_surface_in_monitor():
+    g = geo_store(replica_regions=("near",))
+    g.tick(now=2 * HOUR)
+    gauges = g.fs.monitor.system.snapshot()["gauges"]
+    assert gauges["replication/lag_batches/near"] > 0
+    g.drain()
+    g.tick(now=3 * HOUR)  # another materialization window re-lags the replica
+    gauges = g.fs.monitor.system.snapshot()["gauges"]
+    assert gauges["replication/lag_batches/near"] > 0
+    g.drain()
+    g.fs._refresh_staleness()
+    gauges = g.fs.monitor.system.snapshot()["gauges"]
+    assert gauges["replication/lag_batches/near"] == 0
+    assert gauges["replication/staleness_ms/near"] == 0
+    assert g.fs.monitor.system.counters["replication/shipped_batches"] > 0
+
+
+def test_snapshot_bootstrap_of_late_replica():
+    g = geo_store()
+    g.tick(now=3 * HOUR)  # home has state before any replica exists
+    g.add_replica("near")
+    assert g.lag("near")["batches"] == 0  # snapshot, not log replay
+    assert_dumps_identical(
+        g.fs.online,
+        g.replicator.stores["near"],
+        g.registry.get_feature_set("act", 1),
+        "snapshot bootstrap",
+    )
+
+
+def test_materializer_outcomes_carry_replication_seq():
+    g = geo_store(replica_regions=("near",))
+    g.tick(now=HOUR)
+    seqs = [o.online_stats["replication_seq"] for o in g.fs.materializer.outcomes]
+    assert seqs == sorted(seqs)
+    assert all(s is not None for s in seqs)
+
+
+def test_publisher_backpressure_degrades_to_sync_drain():
+    """A full log must never lose a batch the home store already applied:
+    the publisher drains healthy replicas synchronously and keeps going."""
+    g = geo_store(replica_regions=("near",), log_capacity=2)
+    for h in range(2, 12, 2):
+        g.tick(now=h * HOUR)  # many more batches than the log holds
+    assert g.fs.monitor.system.counters.get("replication/log_force_appends", 0) == 0
+    g.drain()
+    assert_dumps_identical(
+        g.fs.online,
+        g.replicator.stores["near"],
+        g.registry.get_feature_set("act", 1),
+        "backpressure sync-drain",
+    )
+
+
+def test_publisher_force_appends_when_dead_replica_pins_log():
+    """An unhealthy replica can't be drained; the log grows past capacity
+    (with a monitor counter) instead of dropping batches, and the replica
+    converges byte-identically once it recovers."""
+    g = geo_store(replica_regions=("near", "far"), log_capacity=2)
+    g.mark_down("far")
+    for h in range(2, 12, 2):
+        g.tick(now=h * HOUR)
+    assert len(g.log) > 2  # grew past capacity rather than dropping
+    assert g.fs.monitor.system.counters["replication/log_force_appends"] > 0
+    spec = g.registry.get_feature_set("act", 1)
+    # the sync-drain fallback kept the healthy replica within one
+    # append-window of home; an explicit drain closes the tail
+    assert g.lag("near")["batches"] <= len(g.log)
+    g.drain("near")
+    assert_dumps_identical(
+        g.fs.online, g.replicator.stores["near"], spec, "healthy replica"
+    )
+    g.mark_up("far")
+    g.drain("far")
+    assert_dumps_identical(
+        g.fs.online, g.replicator.stores["far"], spec, "recovered replica"
+    )
+    assert len(g.log) <= 2  # drained cursors let truncation shrink it back
+
+
+def test_second_failover_skips_the_dead_ex_home():
+    """After promotion the ex-home has no store; a later failover must pick
+    a real replica, and the ex-home can rejoin via snapshot bootstrap."""
+    g = geo_store(replica_regions=("near", "far"))
+    spec = g.registry.get_feature_set("act", 1)
+    ids = [np.arange(40, dtype=np.int64)]
+    g.tick(now=2 * HOUR)
+    g.mark_down("home")
+    assert g.failover()["promoted"] == "near"
+    assert "home" not in g.placement.replicas
+    g.mark_up("home")  # region recovers, but its store is gone
+    g.mark_down("near")
+    info = g.failover()
+    assert info["promoted"] == "far"  # not the storeless ex-home
+    assert g.home_region == "far" and g.placement.home_region == "far"
+    g.tick(now=4 * HOUR)
+    vals, found, route = g.get_online_features("act", 1, ids, consumer_region="far")
+    assert route == {"region": "far", "modeled_ms": 1.0}
+    # the recovered ex-home rejoins as a replica via snapshot bootstrap
+    g.add_replica("home")
+    g.drain()
+    assert_dumps_identical(
+        g.fs.online, g.replicator.stores["home"], spec, "ex-home rejoin"
+    )
+    _, _, route = g.get_online_features("act", 1, ids, consumer_region="home")
+    assert route == {"region": "home", "modeled_ms": 1.0}
+
+
+# -- the two-region end-to-end scenario (acceptance) --------------------------
+
+
+def test_two_region_scenario_with_failover_replay():
+    """Materialize at home; drain; serve identical rows locally from the
+    replica; keep materializing WITHOUT draining (un-acked suffix); kill
+    home; failover replays the suffix and the promoted store's dump_all is
+    byte-identical to the home store's pre-failure state."""
+    g = geo_store(replica_regions=("near", "far"))
+    spec = g.registry.get_feature_set("act", 1)
+    ids = [np.arange(40, dtype=np.int64)]
+
+    g.tick(now=3 * HOUR)
+    g.drain()
+    vals_home, found_home, route_home = g.get_online_features(
+        "act", 1, ids, consumer_region="home"
+    )
+    vals_rep, found_rep, route_rep = g.get_online_features(
+        "act", 1, ids, consumer_region="near"
+    )
+    assert route_home == {"region": "home", "modeled_ms": 1.0}
+    assert route_rep == {"region": "near", "modeled_ms": 1.0}  # local read
+    np.testing.assert_array_equal(found_rep, found_home)
+    np.testing.assert_array_equal(vals_rep, vals_home)
+
+    # more materialization the replicas have NOT applied yet
+    g.tick(now=6 * HOUR)
+    assert g.lag("near")["batches"] > 0
+    pre_failure = g.fs.online.dump_all("act", 1)
+
+    g.mark_down("home")
+    with pytest.raises(RegionDownError):
+        g.route_read("home")  # nothing in sync while replicas lag
+    info = g.failover()
+    assert info["promoted"] == "near"  # nearest healthy, not set order
+    assert info["replayed_batches"] > 0
+
+    promoted = g.replicator.stores["near"]
+    assert g.fs.online is promoted  # writes re-pointed at the new primary
+    post = promoted.dump_all("act", 1)
+    assert set(post.names) == set(pre_failure.names)
+    for name in post.names:
+        np.testing.assert_array_equal(post[name], pre_failure[name], err_msg=name)
+
+    # the surviving replica keeps replicating from the new home
+    g.tick(now=7 * HOUR)
+    g.drain()
+    assert_dumps_identical(
+        promoted, g.replicator.stores["far"], spec, "post-failover chain"
+    )
+    vals2, found2, route2 = g.get_online_features(
+        "act", 1, ids, consumer_region="far"
+    )
+    assert route2 == {"region": "far", "modeled_ms": 1.0}

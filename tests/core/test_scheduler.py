@@ -1,7 +1,6 @@
 """Scheduling subsystem (paper §3.1.1, §4.3): window-state tracking,
 non-overlap invariant, context-aware backfill, retries, resume."""
 
-import json
 
 import pytest
 from hypothesis import given, settings, strategies as st

@@ -3,7 +3,6 @@
 All Pallas execution is interpret=True (CPU container; TPU is the target).
 """
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

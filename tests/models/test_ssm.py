@@ -1,7 +1,6 @@
 """Mamba2 SSD: chunked (matmul, train) form vs naive recurrence oracle, and
 decode-step agreement with the full-sequence forward."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
