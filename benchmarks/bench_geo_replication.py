@@ -6,13 +6,21 @@ core/replication.py:
 
   * REPLICATION THROUGHPUT — reduced merge batches from a home store's
     100k-row materialization window drained into a replica store, rows/s on
-    both sides (home merge vs replica apply), plus shipped bytes and the
-    modeled WAN shipping time — and a byte-identical end-state check;
+    both sides (home merge vs replica apply) for BOTH planes — online
+    winning-writes and offline inserted-chunks — plus per-plane shipped
+    bytes and the modeled WAN shipping time, with a byte-identical
+    (online) / chunk-set-identical (offline) end-state check;
   * READ LATENCY — the same feature rows served to a remote consumer via
     cross-region access (home store + WAN penalty) vs a local replica read
     (replica store + local link): measured store wall time + modeled link;
-  * FAILOVER — wall time to replay an un-acked suffix when promoting the
-    nearest healthy replica, and the replayed rows/s.
+  * FAILOVER — wall time to replay an un-acked two-plane suffix when
+    promoting the nearest healthy replica, and the replayed rows/s.
+
+The throughput section runs the SAME fixed workload in --fast mode: its
+shipped-byte counts are a deterministic function of the workload (seeded
+rng + idempotent merges), which is what lets benchmarks/check_regression.py
+gate them EXACTLY against the committed BENCH_geo_replication.json on every
+CI run.
 """
 
 from __future__ import annotations
@@ -28,6 +36,7 @@ from repro.core.assets import (
     MaterializationSettings,
 )
 from repro.core.dsl import UDFTransform
+from repro.core.offline_store import OfflineStore
 from repro.core.online_store import OnlineStore
 from repro.core.regions import GeoTopology, Region
 from repro.core.replication import GeoReplicator, ReplicationLog
@@ -80,18 +89,31 @@ def _assert_identical(a: OnlineStore, b: OnlineStore, spec) -> None:
         np.testing.assert_array_equal(da[name], db[name], err_msg=name)
 
 
+def _assert_offline_identical(a: OfflineStore, b: OfflineStore, spec) -> None:
+    da = a.canonical_history(spec.name, spec.version)
+    db = b.canonical_history(spec.name, spec.version)
+    assert len(da) == len(db), f"offline rows {len(da)} vs {len(db)}"
+    for name in da.names:
+        np.testing.assert_array_equal(da[name], db[name], err_msg=name)
+
+
 def bench_replication_throughput(
     window_rows: int = 100_000, batches: int = 10, entities: int = 50_000
 ) -> dict:
-    """Merge one materialization window into the home store batch by batch,
-    then drain the log into a replica: rows/s on each side of the WAN."""
+    """Merge one materialization window into the home stores batch by
+    batch, then drain the log into a replica: rows/s on each side of the
+    WAN, one timed phase per plane so the numbers don't blend."""
     spec = _spec()
     topo = _topo()
     home = OnlineStore()
-    log = ReplicationLog(capacity=4 * batches)
-    repl = GeoReplicator(home, topology=topo, home_region="westus2", log=log)
+    home_off = OfflineStore()
+    log = ReplicationLog(capacity=8 * batches)
+    repl = GeoReplicator(
+        home, topology=topo, home_region="westus2", home_offline=home_off, log=log
+    )
     replica = OnlineStore()
-    repl.add_replica("eastus", replica)
+    replica_off = OfflineStore()
+    repl.add_replica("eastus", replica, replica_off)
 
     rng = np.random.default_rng(7)
     per_batch = window_rows // batches
@@ -109,20 +131,33 @@ def bench_replication_throughput(
         }
     )
     home.merge(spec, warm, 10**6)
+    home_off.merge(spec, warm, 10**6)
     repl.drain()
 
+    # -- online plane: merge at home, then drain the log into the replica
     t0 = time.perf_counter()
     for i, f in enumerate(frames):
-        home.merge(spec, f, 10**7 + i)
+        home.merge(spec, f, 10**8 + i)
     home_wall = time.perf_counter() - t0
-
     pending = log.lag("eastus")
     t0 = time.perf_counter()
     repl.drain("eastus")
     apply_wall = time.perf_counter() - t0
     _assert_identical(home, replica, spec)
 
+    # -- offline plane: same frames, insert-if-absent history merges
+    t0 = time.perf_counter()
+    for i, f in enumerate(frames):
+        home_off.merge(spec, f, 2 * 10**8 + i)
+    off_home_wall = time.perf_counter() - t0
+    off_pending = log.lag("eastus")
+    t0 = time.perf_counter()
+    repl.drain("eastus")
+    off_apply_wall = time.perf_counter() - t0
+    _assert_offline_identical(home_off, replica_off, spec)
+
     ship = repl.shipped["eastus"]
+    by_plane = ship["by_plane"]
     return {
         "window_rows": window_rows,
         "batches": batches,
@@ -131,9 +166,14 @@ def bench_replication_throughput(
         "reduction_x": round(window_rows / max(pending["rows"], 1), 2),
         "replica_apply_rows_per_s": int(pending["rows"] / apply_wall),
         "window_rows_per_s_through_replication": int(window_rows / apply_wall),
-        "shipped_bytes": ship["bytes"],
+        "shipped_bytes": by_plane["online"]["bytes"],
+        "home_offline_merge_rows_per_s": int(window_rows / off_home_wall),
+        "offline_shipped_rows": off_pending["rows"],
+        "offline_apply_rows_per_s": int(off_pending["rows"] / off_apply_wall),
+        "offline_shipped_bytes": by_plane["offline"]["bytes"],
         "modeled_wan_ship_ms": round(ship["ms"], 2),
         "replica_state_identical": True,
+        "offline_state_identical": True,
     }
 
 
@@ -184,22 +224,33 @@ def bench_read_latency(
 def bench_failover_replay(
     entities: int = 20_000, suffix_rows: int = 50_000, batches: int = 5
 ) -> dict:
-    """Un-acked suffix replay: the data-plane cost of promoting a replica."""
+    """Un-acked suffix replay: the data-plane cost of promoting a replica —
+    the suffix carries BOTH planes, and the promoted region ends with the
+    lost home's online bytes and offline chunk set."""
     spec = _spec()
     topo = _topo()
     home = OnlineStore()
+    home_off = OfflineStore()
     log = ReplicationLog()
-    repl = GeoReplicator(home, topology=topo, home_region="westus2", log=log)
-    repl.add_replica("eastus", OnlineStore())
-    repl.add_replica("westeurope", OnlineStore())
+    repl = GeoReplicator(
+        home, topology=topo, home_region="westus2", home_offline=home_off, log=log
+    )
+    east_off = OfflineStore()
+    repl.add_replica("eastus", OnlineStore(), east_off)
+    repl.add_replica("westeurope", OnlineStore(), OfflineStore())
 
     rng = np.random.default_rng(13)
-    home.merge(spec, _frame(rng, entities * 2, entities, 0), 10**6)
+    base = _frame(rng, entities * 2, entities, 0)
+    home.merge(spec, base, 10**6)
+    home_off.merge(spec, base, 10**6)
     repl.drain()
     per_batch = suffix_rows // batches
     for i in range(batches):  # the suffix no replica has applied yet
-        home.merge(spec, _frame(rng, per_batch, entities, 10**6 * (i + 2)), 10**7 + i)
+        f = _frame(rng, per_batch, entities, 10**6 * (i + 2))
+        home.merge(spec, f, 10**8 + i)
+        home_off.merge(spec, f, 10**8 + i)
     pre_failure = home.dump_all("geo", 1)
+    pre_failure_off_rows = home_off.num_rows("geo", 1)
     lag = repl.lag("eastus")
 
     topo.regions["westus2"].healthy = False
@@ -209,9 +260,11 @@ def bench_failover_replay(
     post = repl.stores["eastus"].dump_all("geo", 1)
     for name in post.names:
         np.testing.assert_array_equal(post[name], pre_failure[name], err_msg=name)
+    assert east_off.num_rows("geo", 1) == pre_failure_off_rows
     return {
         "unacked_batches": lag["batches"],
         "unacked_rows": lag["rows"],
+        "unacked_offline_rows": lag["planes"]["offline"]["rows"],
         "replay_ms": round(wall * 1e3, 2),
         "replay_rows_per_s": int(promoted["replayed_rows"] / max(wall, 1e-9)),
         "promoted_state_identical": True,
@@ -219,13 +272,13 @@ def bench_failover_replay(
 
 
 def run(fast: bool = False) -> dict:
-    scale = 5 if fast else 1
+    # throughput keeps its full deterministic workload even in --fast (it is
+    # sub-second): check_regression.py gates its shipped-byte counts EXACTLY
+    # against the committed artifact, so the shapes must match the baseline
     return {
-        "throughput": bench_replication_throughput(
-            window_rows=100_000 // scale, entities=50_000 // scale
-        ),
+        "throughput": bench_replication_throughput(),
         "read_latency": bench_read_latency(rounds=10 if fast else 30),
-        "failover": bench_failover_replay(suffix_rows=50_000 // scale),
+        "failover": bench_failover_replay(suffix_rows=10_000 if fast else 50_000),
     }
 
 

@@ -1,25 +1,30 @@
 """Bench-regression gate: fail CI when the serving path gets slower.
 
 Compares the tier-1 bench smoke's output (``results/bench_fast.json``,
-written by ``benchmarks/run.py --fast --only online_store``) against the
-committed trajectory artifact ``BENCH_online_store.json``.  Two classes of
-check:
+written by ``benchmarks/run.py --fast --only online_store,geo_replication``)
+against the committed trajectory artifacts ``BENCH_online_store.json`` and
+``BENCH_geo_replication.json``.  Two classes of check:
 
-* TRANSFER BYTES (deterministic): the device-resident protocol's
-  steady-state byte counts are a function of workload shapes, not machine
-  speed, so any increase is a real regression — resident merge+lookup
-  cycles must not move more bytes per cycle than the committed baseline,
-  must never re-upload the table or sync the host mirror, and kernel GETs
-  must not grow their per-batch traffic.
+* TRANSFER / SHIPPED BYTES (deterministic): the device-resident protocol's
+  steady-state byte counts and the geo replicator's per-plane shipped-byte
+  counts are a function of workload shapes, not machine speed — resident
+  merge+lookup cycles must not move more bytes per cycle than the
+  committed baseline, must never re-upload the table or sync the host
+  mirror, kernel GETs must not grow their per-batch traffic, and the geo
+  throughput bench's online/offline shipped bytes must match the
+  committed numbers EXACTLY (its workload is seeded and fixed-shape even
+  under --fast; a mismatch means the wire format or reduction changed and
+  the baseline must be re-committed deliberately).
 
-* MERGE THROUGHPUT (tolerance + calibration): rows/s is machine- and
-  load-dependent, so the committed baseline is first rescaled by how fast
-  THIS run's ``loop`` reference engine is relative to the baseline's —
-  the per-row loop runs the same code in both runs, making it a cheap
-  machine-speed probe.  The ``vector`` and ``kernel`` engines must then
-  stay within ``--tolerance`` (default 30%) of the calibrated baseline,
-  and ``vector`` must remain faster than ``loop`` outright (the
-  vectorization win is machine-independent).
+* MERGE / APPLY THROUGHPUT (tolerance + calibration): rows/s is machine-
+  and load-dependent, so the committed baseline is first rescaled by how
+  fast THIS run's ``loop`` reference engine is relative to the baseline's
+  — the per-row loop runs the same code in both runs, making it a cheap
+  machine-speed probe.  The ``vector`` and ``kernel`` merge engines and
+  the geo replica-apply rates (both planes) must then stay within
+  ``--tolerance`` (default 30%) of the calibrated baseline, and ``vector``
+  must remain faster than ``loop`` outright (the vectorization win is
+  machine-independent).
 
 Runs locally from ``scripts/tier1.sh`` after the bench smoke, and as a
 dedicated CI step.  Exit code 1 on any regression.
@@ -34,14 +39,14 @@ import sys
 from pathlib import Path
 
 
-def load_online_store_result(path: Path) -> dict:
+def load_suite_result(path: Path, suite_name: str) -> dict:
     """Accept either a benchmarks/run.py output file (suite wrapper) or a
     flat trajectory artifact."""
     data = json.loads(path.read_text())
-    if "online_store" in data:
-        suite = data["online_store"]
+    if suite_name in data:
+        suite = data[suite_name]
         if not suite.get("ok"):
-            raise SystemExit(f"{path}: online_store suite failed: {suite}")
+            raise SystemExit(f"{path}: {suite_name} suite failed: {suite}")
         return suite["result"]
     return data
 
@@ -72,7 +77,9 @@ def check_transfer_bytes(cur: dict, base: dict, failures: list[str]) -> None:
 
 def check_merge_throughput(
     cur: dict, base: dict, tolerance: float, failures: list[str]
-) -> None:
+) -> float:
+    """Gate the merge engines; returns the machine-speed calibration scale
+    (this run's loop reference vs the baseline's) for downstream gates."""
     c, b = cur["merge_engines"], base["merge_engines"]
     cur_loop = c["loop"]["rows_per_s"]
     base_loop = b["loop"]["rows_per_s"]
@@ -89,6 +96,39 @@ def check_merge_throughput(
     vec = c["vector"]["rows_per_s"]
     if vec < cur_loop:
         failures.append(f"vector ({vec} rows/s) fell behind loop ({cur_loop} rows/s)")
+    return scale
+
+
+def check_geo_replication(
+    cur: dict, base: dict, tolerance: float, scale: float, failures: list[str]
+) -> None:
+    """Offline+online plane gates for the geo replicator (ISSUE 4): shipped
+    bytes exactly (the throughput workload is seeded and fixed-shape, so
+    any drift is a wire-format/reduction change that must be re-committed
+    deliberately); replica-apply rows/s within the machine-calibrated
+    tolerance, per plane."""
+    c, b = cur["throughput"], base["throughput"]
+    for field in ("shipped_bytes", "offline_shipped_bytes"):
+        got, want = c[field], b[field]
+        if got != want:
+            failures.append(
+                f"geo {field} drifted: {got} vs committed {want} "
+                f"(re-commit BENCH_geo_replication.json if intentional)"
+            )
+        else:
+            print(f"  ok: geo {field} {got} B (exact match)")
+    for field in ("replica_apply_rows_per_s", "offline_apply_rows_per_s"):
+        got = c[field]
+        floor = int(b[field] * scale * (1.0 - tolerance))
+        if got < floor:
+            failures.append(
+                f"geo {field} dropped >{tolerance:.0%}: {got} rows/s vs {floor}"
+            )
+        else:
+            print(f"  ok: geo {field} {got} rows/s (calibrated floor {floor})")
+    for field in ("replica_state_identical", "offline_state_identical"):
+        if not c.get(field):
+            failures.append(f"geo {field} is no longer asserted true")
 
 
 def main() -> None:
@@ -105,6 +145,11 @@ def main() -> None:
         help="committed trajectory artifact to gate against",
     )
     ap.add_argument(
+        "--geo-baseline",
+        default=str(repo / "BENCH_geo_replication.json"),
+        help="committed geo-replication artifact (pass '' to skip geo gates)",
+    )
+    ap.add_argument(
         "--tolerance",
         type=float,
         default=float(os.environ.get("BENCH_TOLERANCE", "0.30")),
@@ -112,13 +157,17 @@ def main() -> None:
     )
     args = ap.parse_args()
 
-    cur = load_online_store_result(Path(args.current))
-    base = load_online_store_result(Path(args.baseline))
+    cur = load_suite_result(Path(args.current), "online_store")
+    base = load_suite_result(Path(args.baseline), "online_store")
 
     failures: list[str] = []
     print("bench-regression gate:")
     check_transfer_bytes(cur, base, failures)
-    check_merge_throughput(cur, base, args.tolerance, failures)
+    scale = check_merge_throughput(cur, base, args.tolerance, failures)
+    if args.geo_baseline:
+        geo_cur = load_suite_result(Path(args.current), "geo_replication")
+        geo_base = load_suite_result(Path(args.geo_baseline), "geo_replication")
+        check_geo_replication(geo_cur, geo_base, args.tolerance, scale, failures)
     if failures:
         print("\nREGRESSIONS DETECTED:", file=sys.stderr)
         for f in failures:

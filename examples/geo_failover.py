@@ -1,7 +1,8 @@
 """Geo-distribution example: cross-region access, replication, fail-over,
-and resumable materialization (paper §3.1.2–3.1.3, §4.1.2).
+rejoin, and resumable materialization (paper §3.1.2–3.1.3, §4.1.2).
 
-    PYTHONPATH=src python examples/geo_failover.py
+    PYTHONPATH=src python examples/geo_failover.py          # full walkthrough
+    PYTHONPATH=src python examples/geo_failover.py --fast   # CI smoke sizes
 
 Scenario:
   * a feature store homed in westus2, consumed from eastus + westeurope
@@ -11,7 +12,12 @@ Scenario:
   * a geo-fenced store refuses replication (compliance, §4.1.2)
   * region failure: fail-over promotes the replica; materialization resumes
     from persisted scheduler state without data loss (§3.1.2)
+  * the full two-plane data plane (core/replication.py): online + offline
+    stores replicate through one log, failover converges both planes, and
+    the recovered ex-home REJOINS via delta bootstrap
 """
+
+import argparse
 
 import numpy as np
 
@@ -24,6 +30,7 @@ from repro.core.regions import (
     Region,
     ReplicationPolicy,
 )
+from repro.core.replication import GeoFeatureStore
 from repro.data.sources import SyntheticEventSource
 
 HOUR = 3_600_000
@@ -62,10 +69,12 @@ def build_store(policy, *, geo_fenced_home=False):
     return fs
 
 
-def main():
+def main(fast: bool = False):
+    hours = 2 if fast else 4
+
     # -- cross-region access (paper's current mechanism) ------------------------
     fs = build_store(ReplicationPolicy.CROSS_REGION_ACCESS)
-    fs.tick(now=4 * HOUR)
+    fs.tick(now=hours * HOUR)
     for consumer in ("westus2", "eastus", "westeurope"):
         serving, ms = fs.geo.route_read(consumer)
         print(f"cross-region read from {consumer:11s} -> served by {serving} "
@@ -73,7 +82,7 @@ def main():
 
     # -- geo-replication (road-map mechanism) ------------------------------------
     fs2 = build_store(ReplicationPolicy.GEO_REPLICATED)
-    fs2.tick(now=4 * HOUR)
+    fs2.tick(now=hours * HOUR)
     fs2.geo.add_replica("eastus")
     serving, ms = fs2.geo.route_read("eastus")
     print(f"\ngeo-replicated read from eastus -> served by {serving} ({ms:.0f} ms)")
@@ -96,13 +105,73 @@ def main():
 
     # the promoted region restores scheduler state and resumes the timeline:
     fs2.restore_scheduler(state)
-    stats = fs2.tick(now=8 * HOUR)
+    stats = fs2.tick(now=2 * hours * HOUR)
     print(f"resumed materialization at new primary: {stats}")
     intervals = fs2.scheduler.materialized_intervals("activity", 1)
     print(f"materialized timeline (no holes, no loss): {intervals}")
     rep = fs2.check_consistency("activity", 1)
     print(f"offline/online consistency after fail-over: {rep.consistent}")
 
+    # -- the full two-plane data plane: replicate, fail over, REJOIN -------------
+    print("\n--- two-plane replication drill (core/replication.py) ---")
+    topo = GeoTopology(
+        regions={r: Region(r) for r in ("westus2", "eastus", "westeurope")},
+        local_latency_ms=1.0,
+        cross_region_latency_ms=60.0,
+        link_latency_ms={("westus2", "eastus"): 32.0},
+    )
+    g = GeoFeatureStore(
+        "geo-data-plane",
+        topology=topo,
+        home_region="westus2",
+        replica_regions=("eastus",),
+    )
+    g.register_source(SyntheticEventSource("tx", num_entities=16, events_per_bucket=32))
+    g.create_feature_set(
+        FeatureSetSpec(
+            name="activity",
+            version=1,
+            entity=Entity("customer", ("entity_id",)),
+            features=(Feature("spend_2h", "float32"),),
+            source_name="tx",
+            transform=DslTransform(
+                "entity_id", "ts", [RollingAgg("spend_2h", "amount", 2 * HOUR, "sum")]
+            ),
+            timestamp_col="ts",
+            source_lookback=2 * HOUR,
+            materialization=MaterializationSettings(
+                offline_enabled=True, online_enabled=True, schedule_interval=HOUR
+            ),
+        )
+    )
+    g.tick(now=hours * HOUR)
+    lag = g.lag("eastus")
+    print(f"replica lag after materialization: {lag['planes']}")
+    g.drain()
+    ids = [np.arange(16, dtype=np.int64)]
+    _, _, route = g.get_online_features("activity", 1, ids, consumer_region="eastus")
+    print(f"read from eastus served by {route['region']} ({route['modeled_ms']} ms)")
+
+    g.tick(now=(hours + 1) * HOUR)   # leave an un-drained suffix, then fail
+    g.mark_down("westus2")
+    info = g.failover()
+    print(f"westus2 down -> promoted {info['promoted']} "
+          f"(replayed {info['replayed_batches']} batches on both planes)")
+    print(f"promoted offline history rows: {g.fs.offline.num_rows('activity', 1)}")
+
+    g.mark_up("westus2")             # region recovers: its stores are gone...
+    info = g.rejoin("westus2")       # ...so it rejoins via delta bootstrap
+    print(f"ex-home rejoined: bootstrapped {info['online_rows']} online rows, "
+          f"{info['offline_rows']} offline rows in {info['chunks']} chunks")
+    g.tick(now=(hours + 2) * HOUR)
+    g.drain()
+    home_rows = g.fs.offline.num_rows("activity", 1)
+    rejoined_rows = g.replicator.offline_stores["westus2"].num_rows("activity", 1)
+    print(f"steady state: home offline rows={home_rows}, "
+          f"rejoined replica rows={rejoined_rows} (identical={home_rows == rejoined_rows})")
+
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="tiny CI-smoke workloads")
+    main(fast=ap.parse_args().fast)

@@ -1,6 +1,7 @@
 """Quickstart: the paper's end-to-end feature-store story in one script.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py          # full walkthrough
+    PYTHONPATH=src python examples/quickstart.py --fast   # CI smoke sizes
 
 Walks through every §2.1 capability on a synthetic transaction stream:
 
@@ -13,6 +14,8 @@ Walks through every §2.1 capability on a synthetic transaction stream:
   6.  offline/online consistency check + Fig.5 record semantics   [§4.5]
   7.  feature->model lineage                                      [§4.6]
 """
+
+import argparse
 
 import numpy as np
 
@@ -27,10 +30,16 @@ HOUR = 3_600_000
 DAY = 24 * HOUR
 
 
-def main():
+def main(fast: bool = False):
+    # --fast: tiny workloads for the CI examples-smoke step
+    hours = 6 if fast else 12
+    events_per_bucket = 40 if fast else 200
+
     # -- 1. store + source -----------------------------------------------------
     fs = FeatureStore("quickstart", region="westus2")
-    src = SyntheticEventSource("transactions", num_entities=40, events_per_bucket=200)
+    src = SyntheticEventSource(
+        "transactions", num_entities=40, events_per_bucket=events_per_bucket
+    )
     fs.register_source(src)
 
     # -- 2. entity + DSL feature set -------------------------------------------
@@ -68,7 +77,7 @@ def main():
           f"(fingerprint {spec.transform.code_fingerprint()})")
 
     # -- 3. scheduled materialization + backfill --------------------------------
-    stats = fs.tick(now=12 * HOUR)          # 12h of scheduled incremental jobs
+    stats = fs.tick(now=hours * HOUR)       # N hours of scheduled incremental jobs
     print(f"scheduled materialization: {stats}")
     stats = fs.backfill("customer_activity", 1, start=0, end=4 * HOUR)
     print(f"backfill(0..4h): {stats} (overlap-free per §4.3 — see scheduler)")
@@ -77,7 +86,7 @@ def main():
     rng = np.random.default_rng(0)
     spine = Table({
         "entity_id": rng.integers(0, 40, size=8).astype(np.int64),
-        "ts": rng.integers(2 * HOUR, 11 * HOUR, size=8).astype(np.int64),
+        "ts": rng.integers(2 * HOUR, (hours - 1) * HOUR, size=8).astype(np.int64),
         "label": rng.integers(0, 2, size=8).astype(np.float32),
     })
     frame = fs.get_offline_features(spine, [("customer_activity", 1)])
@@ -110,4 +119,6 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="tiny CI-smoke workloads")
+    main(fast=ap.parse_args().fast)

@@ -56,12 +56,8 @@ def check_consistency(
     checks are searchsorted alignments, not per-id dict probes."""
     latest = offline.latest_per_key(spec.name, spec.version)
     online_dump = online.dump_all(spec.name, spec.version)
-    off_k = (
-        latest["__key__"] if len(latest) else np.empty(0, np.int64)
-    )
-    on_k = (
-        online_dump["__key__"] if len(online_dump) else np.empty(0, np.int64)
-    )
+    off_k = latest["__key__"] if len(latest) else np.empty(0, np.int64)
+    on_k = online_dump["__key__"] if len(online_dump) else np.empty(0, np.int64)
     missing_online = np.setdiff1d(off_k, on_k, assume_unique=True)
     missing_offline = np.setdiff1d(on_k, off_k, assume_unique=True)
     common, off_i, on_i = np.intersect1d(

@@ -97,9 +97,7 @@ class DslTransform(TransformProtocol):
         n = len(source_df)
         # Shared sort by (entity..., ts): done once for the whole plan.
         sort_cols = (*self.entity_cols, self.timestamp_col)
-        order = np.lexsort(
-            tuple(source_df[c] for c in reversed(sort_cols))
-        )
+        order = np.lexsort(tuple(source_df[c] for c in reversed(sort_cols)))
         sorted_df = source_df.take(order)
         ts = sorted_df[self.timestamp_col].astype(np.int64)
         seg = self._segment_ids(sorted_df)
@@ -126,9 +124,7 @@ class DslTransform(TransformProtocol):
 
         for window, group in kernel_groups.items():
             cols = sorted(set(a.source_col for a in group))
-            mat = np.stack(
-                [sorted_df[c].astype(np.float32) for c in cols], axis=1
-            )
+            mat = np.stack([sorted_df[c].astype(np.float32) for c in cols], axis=1)
             sums = np.asarray(
                 rolling_ops.rolling_agg(
                     jnp.asarray(mat), starts_by_window[window], "sum",

@@ -129,9 +129,7 @@ class FeatureStore:
         self._refresh_staleness()
         return stats
 
-    def backfill(
-        self, name: str, version: int, start: int, end: int
-    ) -> dict[str, int]:
+    def backfill(self, name: str, version: int, start: int, end: int) -> dict[str, int]:
         """On-demand backfill materialization (§2.1, §4.3)."""
         self.scheduler.request_backfill(name, version, FeatureWindow(start, end))
         stats = self.supervisor.drain()

@@ -43,9 +43,7 @@ def encode_keys(columns: list[np.ndarray]) -> np.ndarray:
     return (acc >> np.uint64(1)).view(np.int64)  # clear sign bit
 
 
-def encode_full_keys(
-    ids: np.ndarray, event_ts: np.ndarray, creation_ts
-) -> np.ndarray:
+def encode_full_keys(ids: np.ndarray, event_ts: np.ndarray, creation_ts) -> np.ndarray:
     """Mix the offline store's FULL record key (id, event_ts, creation_ts)
     into one int64 — the §4.5 idempotence check key.
 
@@ -60,7 +58,9 @@ def encode_full_keys(
         # two mix rounds: ids and event_ts are decorrelated by the first,
         # creation_ts (constant per batch) folds into the second — one
         # fewer full-array pass than mixing each field separately
-        h = _splitmix64(np.asarray(ids, np.int64).view(np.uint64) ^ (ev << np.uint64(1)))
+        h = _splitmix64(
+            np.asarray(ids, np.int64).view(np.uint64) ^ (ev << np.uint64(1))
+        )
         h = _splitmix64(h ^ ev ^ cr)
     # non-negative so signed and unsigned sort orders coincide (radix sort)
     return (h >> np.uint64(1)).view(np.int64)
@@ -90,7 +90,5 @@ def _hash_object_column(col: np.ndarray) -> np.ndarray:
         codes = np.ascontiguousarray(s).view(np.uint32).reshape(n, width)
         for j in range(width):
             active = j < lengths
-            h = np.where(
-                active, _splitmix64(h ^ codes[:, j].astype(np.uint64)), h
-            )
+            h = np.where(active, _splitmix64(h ^ codes[:, j].astype(np.uint64)), h)
     return h

@@ -31,9 +31,7 @@ class LineageGraph:
         self._models_of_feature: dict[str, set[ModelNode]] = defaultdict(set)
         self._features_of_model: dict[ModelNode, set[str]] = defaultdict(set)
 
-    def register_model(
-        self, model: ModelNode, feature_refs: Iterable[str]
-    ) -> None:
+    def register_model(self, model: ModelNode, feature_refs: Iterable[str]) -> None:
         refs = set(feature_refs)
         self._features_of_model[model] |= refs
         for r in refs:

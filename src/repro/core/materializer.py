@@ -63,8 +63,11 @@ class MaterializationOutcome:
     online_merged: bool
     creation_ts: int
     # per-batch Algorithm-2 stats from the online merge plan (tallies +
-    # touched-slot count) — the reduced form geo-replication will ship
+    # touched-slot count) — the reduced form geo-replication ships
     online_stats: Optional[dict] = None
+    # per-batch offline merge tallies (insert/dedup counts + the assigned
+    # replication seq) — the offline plane's half of the same shipping story
+    offline_stats: Optional[dict] = None
 
 
 class Materializer:
@@ -101,9 +104,20 @@ class Materializer:
 
         creation_ts = int(self.clock())
         offline_done = online_done = False
+        offline_stats = None
         if spec.materialization.offline_enabled:
             # OfflineStore normalizes "kernel" (online-only) to its vector path
-            self.offline.merge(spec, frame, creation_ts, engine=self.merge_engine)
+            stats = self.offline.merge_with_stats(
+                spec, frame, creation_ts, engine=self.merge_engine
+            )
+            offline_stats = {
+                "inserted": stats["inserted"],
+                "deduped": stats["deduped"],
+                # seq the geo-replication log assigned this batch's offline
+                # plane (annotated by the GeoReplicator's offline merge
+                # listener; None when unattached or fully deduped)
+                "replication_seq": stats.get("replication_seq"),
+            }
             offline_done = True
         self.faults.check("between_merges")
         online_stats = None
@@ -125,8 +139,13 @@ class Materializer:
         self.faults.check("after_merges")
 
         outcome = MaterializationOutcome(
-            job.job_id, len(frame), offline_done, online_done, creation_ts,
+            job.job_id,
+            len(frame),
+            offline_done,
+            online_done,
+            creation_ts,
             online_stats=online_stats,
+            offline_stats=offline_stats,
         )
         self.outcomes.append(outcome)
         return outcome

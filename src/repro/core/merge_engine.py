@@ -59,7 +59,9 @@ def argsort_ids(a: np.ndarray) -> np.ndarray:
 INT64_MIN = np.int64(np.iinfo(np.int64).min)
 
 
-def segmented_exclusive_prefix_max(seg_ids: np.ndarray, values: np.ndarray) -> np.ndarray:
+def segmented_exclusive_prefix_max(
+    seg_ids: np.ndarray, values: np.ndarray
+) -> np.ndarray:
     """Running max of every PRIOR element within each segment.
 
     ``seg_ids`` must be non-decreasing (rows grouped by segment); the first
@@ -85,9 +87,7 @@ def segmented_exclusive_prefix_max(seg_ids: np.ndarray, values: np.ndarray) -> n
     shift = 1
     while shift < max_run:
         same = seg_ids[shift:] == seg_ids[:-shift]
-        out[shift:] = np.where(
-            same, np.maximum(out[shift:], out[:-shift]), out[shift:]
-        )
+        out[shift:] = np.where(same, np.maximum(out[shift:], out[:-shift]), out[shift:])
         shift *= 2
     return out
 
@@ -129,17 +129,17 @@ class OnlineBatchPlan:
     (``uids``); ``winner_row`` indexes back into the ORIGINAL frame.
     """
 
-    uids: np.ndarray          # (G,) int64, ascending
-    winner_row: np.ndarray    # (G,) int64 — original row of the winning record
-    winner_ev: np.ndarray     # (G,) int64 — the id's max event_ts in the batch
-    first_row: np.ndarray     # (G,) int64 — original row of first occurrence
+    uids: np.ndarray  # (G,) int64, ascending
+    winner_row: np.ndarray  # (G,) int64 — original row of the winning record
+    winner_ev: np.ndarray  # (G,) int64 — the id's max event_ts in the batch
+    first_row: np.ndarray  # (G,) int64 — original row of first occurrence
     # beat is the write mask: True exactly where the store state changes
     # (fresh inserts and winners beating the stored record).  The per-batch
     # stats a merge returns (tallies + touched-slot coords) are this plan
     # masked down — nothing is re-derived from store state after the apply,
     # which is what lets the device-resident engine skip pulling planes back.
-    beat: np.ndarray          # (G,) bool — store record must be (re)written
-    is_new: np.ndarray        # (G,) bool — id absent from the store
+    beat: np.ndarray  # (G,) bool — store record must be (re)written
+    is_new: np.ndarray  # (G,) bool — id absent from the store
     inserts: int
     overrides: int
     noops: int

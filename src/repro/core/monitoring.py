@@ -49,7 +49,11 @@ class Metrics:
             "counters": dict(self.counters),
             "gauges": dict(self.gauges),
             "histograms": {
-                k: {"p50": h.percentile(50), "p99": h.percentile(99), "n": len(h.values)}
+                k: {
+                    "p50": h.percentile(50),
+                    "p99": h.percentile(99),
+                    "n": len(h.values),
+                }
                 for k, h in self.histograms.items()
             },
         }
@@ -75,7 +79,9 @@ class HealthMonitor:
         if retried:
             self.system.inc("jobs_retried")
 
-    def record_staleness(self, feature_set: str, version: int, ms: Optional[int]) -> None:
+    def record_staleness(
+        self, feature_set: str, version: int, ms: Optional[int]
+    ) -> None:
         if ms is not None:
             self.system.set_gauge(f"staleness_ms/{feature_set}:v{version}", float(ms))
 
@@ -83,21 +89,42 @@ class HealthMonitor:
         self.system.observe("online_lookup_us", us)
 
     def record_replication_lag(
-        self, replica: str, *, batches: int, rows: int, staleness_ms: int
+        self,
+        replica: str,
+        *,
+        batches: int,
+        rows: int,
+        staleness_ms: int,
+        planes: Optional[dict] = None,
     ) -> None:
         """Per-replica geo-replication lag (§4.1.2 road-map mechanism): how
         many un-acked merge batches/rows the replica is behind, and how old
-        the oldest pending batch is in clock units."""
+        the oldest pending batch is in clock units.  ``planes`` optionally
+        breaks the counts down per store plane (online serving vs offline
+        history), so an offline-only backlog is visible on its own gauge."""
         self.system.set_gauge(f"replication/lag_batches/{replica}", float(batches))
         self.system.set_gauge(f"replication/lag_rows/{replica}", float(rows))
         self.system.set_gauge(
             f"replication/staleness_ms/{replica}", float(staleness_ms)
         )
+        for plane, d in (planes or {}).items():
+            self.system.set_gauge(
+                f"replication/lag_batches/{plane}/{replica}", float(d["batches"])
+            )
+            self.system.set_gauge(
+                f"replication/lag_rows/{plane}/{replica}", float(d["rows"])
+            )
 
-    def record_replication_ship(self, nbytes: int, rows: int) -> None:
+    def record_replication_ship(
+        self, nbytes: int, rows: int, plane: Optional[str] = None
+    ) -> None:
         self.system.inc("replication/shipped_batches")
         self.system.inc("replication/shipped_rows", rows)
         self.system.inc("replication/shipped_bytes", nbytes)
+        if plane is not None:
+            self.system.inc(f"replication/shipped_batches/{plane}")
+            self.system.inc(f"replication/shipped_rows/{plane}", rows)
+            self.system.inc(f"replication/shipped_bytes/{plane}", nbytes)
 
     def healthy(self) -> bool:
         failed = self.system.counters.get("jobs_failed", 0)

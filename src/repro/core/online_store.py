@@ -122,13 +122,13 @@ class DeviceTableState:
     Pallas kernels scan.  int64 keys/timestamps live as (lo, hi) int32
     planes (TPU vector compare is 32-bit native)."""
 
-    keys_lo: jax.Array   # (P, C) int32, -1 = empty
-    keys_hi: jax.Array   # (P, C) int32
-    ev_lo: jax.Array     # (P, C) int32 event_ts planes
+    keys_lo: jax.Array  # (P, C) int32, -1 = empty
+    keys_hi: jax.Array  # (P, C) int32
+    ev_lo: jax.Array  # (P, C) int32 event_ts planes
     ev_hi: jax.Array
-    cr_lo: jax.Array     # (P, C) int32 creation_ts planes
+    cr_lo: jax.Array  # (P, C) int32 creation_ts planes
     cr_hi: jax.Array
-    values: jax.Array    # (P, C, D) float32
+    values: jax.Array  # (P, C, D) float32
 
     def planes(self) -> tuple[jax.Array, ...]:
         return (
@@ -137,24 +137,22 @@ class DeviceTableState:
         )
 
     def nbytes(self) -> int:
-        return sum(
-            int(np.prod(p.shape)) * p.dtype.itemsize for p in self.planes()
-        )
+        return sum(int(np.prod(p.shape)) * p.dtype.itemsize for p in self.planes())
 
 
 @dataclasses.dataclass
 class _PartitionedTable:
-    keys_lo: np.ndarray      # (P, C) int32, -1 = empty
-    keys_hi: np.ndarray      # (P, C) int32
-    keys_full: np.ndarray    # (P, C) int64 (host-side truth)
-    event_ts: np.ndarray     # (P, C) int64
+    keys_lo: np.ndarray  # (P, C) int32, -1 = empty
+    keys_hi: np.ndarray  # (P, C) int32
+    keys_full: np.ndarray  # (P, C) int64 (host-side truth)
+    event_ts: np.ndarray  # (P, C) int64
     creation_ts: np.ndarray  # (P, C) int64
-    values: np.ndarray       # (P, C, D) float32
-    fill: np.ndarray         # (P,) int64 next fresh slot per partition
+    values: np.ndarray  # (P, C, D) float32
+    fill: np.ndarray  # (P,) int64 next fresh slot per partition
     # sorted key index: idx_keys ascending; idx_part/idx_slot parallel
-    idx_keys: np.ndarray     # (K,) int64
-    idx_part: np.ndarray     # (K,) int64
-    idx_slot: np.ndarray     # (K,) int64
+    idx_keys: np.ndarray  # (K,) int64
+    idx_part: np.ndarray  # (K,) int64
+    idx_slot: np.ndarray  # (K,) int64
     # per-partition FIFO of slots freed by sweep; consumed before fill so
     # TTL churn recycles capacity instead of growing partitions forever
     free: Optional[list] = None
@@ -230,9 +228,7 @@ class OnlineStore:
         # into the host mirror first, then grow host-side and let the next
         # kernel op re-upload at the new shape
         self._mutate_host(t)
-        grow = lambda a, fillv: np.concatenate(
-            [a, np.full_like(a, fillv)], axis=1
-        )
+        grow = lambda a, fillv: np.concatenate([a, np.full_like(a, fillv)], axis=1)
         t.keys_lo = grow(t.keys_lo, -1)
         t.keys_hi = grow(t.keys_hi, -1)
         t.keys_full = grow(t.keys_full, -1)
@@ -341,9 +337,7 @@ class OnlineStore:
         )
 
     # -- slot assignment (shared by all engines) ----------------------------
-    def _assign_slots(
-        self, key: tuple[str, int], parts_o: np.ndarray
-    ) -> np.ndarray:
+    def _assign_slots(self, key: tuple[str, int], parts_o: np.ndarray) -> np.ndarray:
         """Assign a slot to each to-insert id (``parts_o``: partitions in
         ARRIVAL order).  Per partition, sweep-freed slots are consumed FIFO
         before the fill counter advances — identical to the loop engine's
@@ -749,9 +743,7 @@ class OnlineStore:
         ttl = spec.materialization.online_ttl
         if use_kernel:
             dev = self._ensure_device(t)
-            q_lo, q_hi, part, pos = lookup_ops.route_queries(
-                self.num_partitions, ids
-            )
+            q_lo, q_hi, part, pos = lookup_ops.route_queries(self.num_partitions, ids)
             slots = np.asarray(
                 lookup_ops.lookup(
                     dev.keys_lo, dev.keys_hi,

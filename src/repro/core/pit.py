@@ -37,17 +37,15 @@ _I32 = 2**31 - 1
 
 @dataclasses.dataclass
 class PitResult:
-    values: dict[str, np.ndarray]   # feature name -> (B,) values
-    found: np.ndarray               # (B,) bool
-    event_ts: np.ndarray            # (B,) int64 (0 where not found)
+    values: dict[str, np.ndarray]  # feature name -> (B,) values
+    found: np.ndarray  # (B,) bool
+    event_ts: np.ndarray  # (B,) int64 (0 where not found)
 
 
 def _prepare_history(history: Table) -> tuple[Table, np.ndarray, np.ndarray]:
     """Sort history by (key, event_ts, creation_ts); return per-row sorted
     table + unique keys + segment offsets (len = n_unique + 1)."""
-    order = np.lexsort(
-        (history[CREATION_TS], history[EVENT_TS], history["__key__"])
-    )
+    order = np.lexsort((history[CREATION_TS], history[EVENT_TS], history["__key__"]))
     h = history.take(order)
     keys = h["__key__"]
     uniq, first = np.unique(keys, return_index=True)
@@ -93,9 +91,7 @@ def pit_join_feature_set(
     # Rebase int64 epoch-ms into the kernel's int32 domain.
     t0 = int(table_ev.min())
     lo_ts = min(t0, int(q_ts.min()))
-    span_ok = (
-        int(table_ev.max()) - lo_ts < _I32 and int(q_ts.max()) - lo_ts < _I32
-    )
+    span_ok = int(table_ev.max()) - lo_ts < _I32 and int(q_ts.max()) - lo_ts < _I32
     if use_kernel and span_ok:
         idx, valid = pit_ops.pit_search(
             jnp.asarray((table_ev - lo_ts).astype(np.int32)),

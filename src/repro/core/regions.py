@@ -15,14 +15,18 @@ latency cost model so benchmarks can contrast the two mechanisms with the
 same numbers a WAN deployment would reason about.
 
 The geo-replication DATA plane lives in core/replication.py: every home
-``OnlineStore.merge`` appends its reduced winner rows to a ``ReplicationLog``
-(one monotone sequence, one cursor per replica), an async applier drains the
-log into replica stores, and ``GeoPlacement.failover`` here decides WHICH
-replica gets promoted — the nearest healthy one by this topology's latency
-model — after which the applier replays that replica's un-acked log suffix.
-Replay is safe because Algorithm 2 is an idempotent, commutative
-latest-wins join on (event_ts, creation_ts): re-delivered or reordered
-batches converge to the same store state.
+``OnlineStore.merge`` appends its reduced winner rows — and every home
+``OfflineStore.merge`` its inserted rows — to a ``ReplicationLog`` (one
+monotone sequence spanning both planes, one cursor per replica), an async
+applier drains the log into replica stores, and ``GeoPlacement.failover``
+here decides WHICH replica gets promoted — the nearest healthy one by this
+topology's latency model — after which the applier replays that replica's
+un-acked log suffix.  Replay is safe because both planes' merges are
+idempotent: Algorithm 2's commutative latest-wins join on (event_ts,
+creation_ts) online, full-key insert-if-absent offline.  A failed ex-home
+leaves the serving set at promotion (``remove_replica``) and re-enters it
+when recovered via ``add_replica`` — the control-plane half of
+``GeoFeatureStore.rejoin``'s delta bootstrap.
 
 ``GeoTopology`` supports per-link latency overrides (``link_latency_ms``)
 on top of the two-tier local/WAN default, so "nearest" is a real choice
@@ -47,7 +51,7 @@ __all__ = [
 
 class ReplicationPolicy(enum.Enum):
     CROSS_REGION_ACCESS = "cross_region_access"  # paper's current mechanism
-    GEO_REPLICATED = "geo_replicated"            # paper's road-map mechanism
+    GEO_REPLICATED = "geo_replicated"  # paper's road-map mechanism
 
 
 class RegionDownError(RuntimeError):
@@ -97,9 +101,7 @@ class GeoTopology:
         serialization at the WAN bandwidth (local transfers are free)."""
         if src == dst:
             return 0.0
-        return self.latency(src, dst) + nbytes * 8 / (
-            self.cross_region_gbps * 1e6
-        )
+        return self.latency(src, dst) + nbytes * 8 / (self.cross_region_gbps * 1e6)
 
 
 class GeoPlacement:
@@ -122,9 +124,7 @@ class GeoPlacement:
     # -- replication --------------------------------------------------------
     def add_replica(self, region: str) -> None:
         if self.policy is not ReplicationPolicy.GEO_REPLICATED:
-            raise ComplianceError(
-                "replicas require the GEO_REPLICATED policy (§4.1.2)"
-            )
+            raise ComplianceError("replicas require the GEO_REPLICATED policy (§4.1.2)")
         home = self.topology.regions[self.home_region]
         if home.geo_fenced:
             raise ComplianceError(

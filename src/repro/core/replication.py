@@ -1,48 +1,92 @@
-"""Async geo-replication of online merge batches (paper §2.1, §4.1.2 road map).
+"""Async geo-replication of BOTH store planes (paper §2.1, §4.1.2 road map).
 
 The paper's implemented mechanism keeps an asset in its creation region and
 pays WAN latency on every remote read; its road-map mechanism replicates the
 asset into consumer regions so reads are local.  This module is that road-map
-mechanism made concrete for the online store, built on the shipping unit PR 2
-created: every ``OnlineStore.merge`` already reduces a materialization frame
-to the winning writes it actually applied (encoded key, winning event_ts,
-feature row, one shared creation_ts) and reports them in its stats.
+mechanism made concrete for both materialization targets: the paper's store
+is only a feature store because the SAME data lands offline (training) and
+online (inferencing), so a failover that recovers one plane but not the
+other reintroduces exactly the online–offline skew the architecture exists
+to prevent.  Both planes ship through one log:
+
+  * ONLINE plane — every ``OnlineStore.merge`` reduces a materialization
+    frame to the winning writes it actually applied (encoded key, winning
+    event_ts, feature row, one shared creation_ts) and reports them in its
+    stats (PR 2's shipping unit);
+  * OFFLINE plane — every ``OfflineStore.merge`` reports the rows it
+    actually INSERTED (post full-key dedup, arrival order): encoded entity
+    keys + event_ts flat arrays plus the index/feature columns in native
+    dtypes.  Replica-side ``OfflineStore.apply_chunks`` re-runs the same
+    full-key dedup, so a replica's shard-chunk set converges to the home's.
+
+Two-plane ``ReplicatedBatch`` protocol
+--------------------------------------
+A batch tags ``plane="online"|"offline"`` over one shared sequence: the
+``ReplicationLog`` is ONE totally-ordered log per home store, and each
+replica owns ONE cursor covering both planes — per-replica cursor semantics,
+out-of-order ack handling, truncation, and backpressure are plane-agnostic.
+``keys``/``event_ts``/``values`` are flat planes for both variants; offline
+batches add ``columns`` (index + native-dtype feature arrays, the record-
+schema remainder) and leave ``values`` empty.  ``ReplicationLog.lag``
+reports a per-plane breakdown on top of the combined counts.
 
 Log / cursor / replay protocol
 ------------------------------
-``ReplicationLog`` is a bounded, totally-ordered sequence of those reduced
-batches, appended by a listener on the home store's ``merge_listeners``.
+``ReplicationLog`` is a bounded, totally-ordered sequence of reduced
+batches, appended by listeners on the home stores' ``merge_listeners``.
 Each replica owns a CURSOR: the lowest sequence number it has not yet
 acknowledged.  The async applier (``GeoReplicator.drain``) ships pending
-batches over the modeled WAN link and applies them to the replica store via
-``OnlineStore.merge_reduced`` — the same Algorithm-2 engines the home store
-runs.  Acknowledgements may arrive out of order (``apply_batch``); the
-cursor only advances over the contiguous acknowledged prefix, so lag
-accounting never under-reports.  ``truncate`` drops exactly the prefix below
-EVERY cursor — an un-acked batch is never dropped; when the log is full and
-no prefix is fully acknowledged, ``append`` raises ``ReplicationLogFull``
-(backpressure) instead of losing data.  The PUBLISHER must never lose a
-batch either (the home store has already applied it when the listener
-fires), so under backpressure the replicator first degrades to a
-synchronous drain of every healthy replica, and only if a dead replica
-still pins the tail does it force-append past capacity — bounded growth
-plus a monitor counter, never divergence.
+batches over the modeled WAN link and applies them to the replica stores —
+``OnlineStore.merge_reduced`` (the same Algorithm-2 engines the home store
+runs) or ``OfflineStore.apply_chunks`` by plane.  Acknowledgements may
+arrive out of order (``apply_batch``); the cursor only advances over the
+contiguous acknowledged prefix, so lag accounting never under-reports.
+``truncate`` drops exactly the prefix below EVERY cursor — an un-acked
+batch is never dropped; when the log is full and no prefix is fully
+acknowledged, ``append`` raises ``ReplicationLogFull`` (backpressure)
+instead of losing data.  The PUBLISHER must never lose a batch either (the
+home store has already applied it when the listener fires), so under
+backpressure the replicator first degrades to a synchronous drain of every
+healthy replica — a drain applies BOTH planes, so mixed-plane tails are
+fully accounted before concluding a replica pins the log — and only if a
+dead replica still pins the tail does it force-append past capacity —
+bounded growth plus a monitor counter, never divergence.
 
-Everything relies on Algorithm 2 being an idempotent, commutative,
-latest-wins join on (event_ts, creation_ts): re-delivering a batch is a
-no-op, reordered batches converge to the same store state, and replaying a
-suffix that partially overlaps already-applied writes is safe.  That is what
-makes fail-over exactly-once in EFFECT with at-least-once DELIVERY:
-``GeoPlacement.failover`` picks the nearest healthy replica (regions.py),
-then ``GeoReplicator.promote`` replays that replica's un-acked suffix,
-leaving its store byte-identical to the home store's pre-failure state.
+Replay safety is per plane: the online plane relies on Algorithm 2 being an
+idempotent, commutative, latest-wins join on (event_ts, creation_ts); the
+offline plane relies on full-key (id, event_ts, creation_ts) insert-if-
+absent idempotence.  Re-delivering a batch is a no-op, reordered batches
+converge, and replaying a suffix that partially overlaps already-applied
+writes is safe.  That is what makes fail-over exactly-once in EFFECT with
+at-least-once DELIVERY: ``GeoPlacement.failover`` picks the nearest healthy
+replica (regions.py), then ``GeoReplicator.promote`` replays that replica's
+un-acked suffix, leaving its online store byte-identical and its offline
+store chunk-set-identical to the home's pre-failure state.
+
+Delta bootstrap + rejoin lifecycle
+----------------------------------
+A replica added after data exists bootstraps via ``bootstrap_delta``: its
+cursor registers at the CURRENT log head (the snapshot-cut sequence
+number), then the home state as of that cut streams over in bounded chunks
+(``chunk_rows`` at a time — offline via ``OfflineStore.export_chunks``,
+online via creation_ts-grouped slices of the dump), and normal draining
+from the cut cursor catches it up.  Batches appended DURING the stream
+overlap the snapshot harmlessly (idempotence again), and an interrupted
+stream can simply be retried — no chunk is ever applied twice.  The same
+path re-admits a recovered ex-home: ``GeoFeatureStore.rejoin(region)`` =
+fresh stores + delta bootstrap of both planes + cursor at the cut, so a
+region whose stores were lost at promotion rejoins as a first-class
+replica instead of being dropped forever.
 
 ``GeoFeatureStore`` is the read/write router on top: writes (materialization
 ticks, backfills) go to the home region's ``FeatureStore``; online reads are
 served by the nearest IN-SYNC replica (replication lag at most
-``max_lag_batches``), falling back to the home store; per-replica lag /
-staleness land in the health monitor.  Geo-fenced home regions refuse
-replication (``ComplianceError``, §4.1.2) exactly as placement does.
+``max_lag_batches``), falling back to the home store; per-replica and
+per-plane lag / staleness land in the health monitor.  ``failover()``
+re-points BOTH of the home ``FeatureStore``'s planes at the promoted
+region's stores, so materialization and training reads resume against the
+new primary without skew.  Geo-fenced home regions refuse replication
+(``ComplianceError``, §4.1.2) exactly as placement does.
 """
 
 from __future__ import annotations
@@ -55,7 +99,7 @@ import numpy as np
 
 from repro.core.assets import FeatureSetSpec
 from repro.core.featurestore import FeatureStore
-from repro.core.offline_store import CREATION_TS, EVENT_TS
+from repro.core.offline_store import CREATION_TS, EVENT_TS, OfflineStore
 from repro.core.online_store import OnlineStore
 from repro.core.regions import GeoTopology, RegionDownError, ReplicationPolicy
 
@@ -75,15 +119,26 @@ class ReplicationLogFull(RuntimeError):
 
 @dataclasses.dataclass(frozen=True)
 class ReplicatedBatch:
-    """One reduced merge batch: the winning writes a single home-store merge
-    applied, in (part, slot) order as the home store reported them."""
+    """One reduced merge batch from either store plane.
+
+    ``plane="online"``: the winning writes a single home online-store merge
+    applied, in (part, slot) order as the home store reported them —
+    ``values`` is the (G, D) float32 feature plane, ``columns`` is None.
+
+    ``plane="offline"``: the rows a single home offline-store merge actually
+    INSERTED (post full-key dedup, arrival order) — ``values`` is empty and
+    ``columns`` carries the record-schema remainder (index columns + native-
+    dtype feature columns), so the replica rebuilds byte-identical chunks.
+    """
 
     seq: int
     table: tuple[str, int]
     creation_ts: int
     keys: np.ndarray  # (G,) int64 encoded entity keys
     event_ts: np.ndarray  # (G,) int64 winning event_ts per key
-    values: np.ndarray  # (G, D) float32 winning feature rows
+    values: np.ndarray  # (G, D) float32 winning feature rows (online plane)
+    plane: str = "online"
+    columns: Optional[dict[str, np.ndarray]] = None  # offline plane payload
 
     @property
     def rows(self) -> int:
@@ -91,7 +146,10 @@ class ReplicatedBatch:
 
     @property
     def nbytes(self) -> int:
-        return self.keys.nbytes + self.event_ts.nbytes + self.values.nbytes
+        n = self.keys.nbytes + self.event_ts.nbytes + self.values.nbytes
+        if self.columns is not None:
+            n += sum(v.nbytes for v in self.columns.values())
+        return n
 
 
 class ReplicationLog:
@@ -139,14 +197,19 @@ class ReplicationLog:
         event_ts: np.ndarray,
         values: np.ndarray,
         *,
+        plane: str = "online",
+        columns: Optional[dict[str, np.ndarray]] = None,
         force: bool = False,
     ) -> ReplicatedBatch:
-        """Append one reduced batch; truncates the fully-acked prefix first
-        and raises ``ReplicationLogFull`` rather than evicting un-acked
-        batches when the log is still at capacity.  ``force=True`` appends
-        past capacity instead of raising — for a publisher whose store
-        ALREADY applied the batch, losing it is worse than growing the log
-        (see GeoReplicator._on_home_merge)."""
+        """Append one reduced batch (either plane — both share the one
+        sequence); truncates the fully-acked prefix first and raises
+        ``ReplicationLogFull`` rather than evicting un-acked batches when
+        the log is still at capacity.  ``force=True`` appends past capacity
+        instead of raising — for a publisher whose store ALREADY applied
+        the batch, losing it is worse than growing the log (see
+        GeoReplicator._publish)."""
+        if plane not in ("online", "offline"):
+            raise ValueError(f"unknown plane {plane!r}")
         if len(self._batches) >= self.capacity:
             self.truncate()
         if len(self._batches) >= self.capacity and not force:
@@ -160,6 +223,8 @@ class ReplicationLog:
             keys=np.asarray(keys, np.int64),
             event_ts=np.asarray(event_ts, np.int64),
             values=np.asarray(values, np.float32),
+            plane=plane,
+            columns=columns,
         )
         self.next_seq += 1
         self._batches.append(batch)
@@ -195,20 +260,33 @@ class ReplicationLog:
         return dropped
 
     def lag(self, replica: str) -> dict:
-        """Un-acked batch/row counts and the oldest pending creation_ts."""
+        """Un-acked batch/row counts (combined + per plane) and the oldest
+        pending creation_ts.  The combined counts are what the in-sync read
+        gate consumes; the per-plane breakdown feeds monitoring, so an
+        offline-only backlog (e.g. a replica serving reads but behind on
+        training history) is visible, not averaged away."""
         pend = self.pending(replica)
+        planes = {
+            p: {
+                "batches": sum(1 for b in pend if b.plane == p),
+                "rows": int(sum(b.rows for b in pend if b.plane == p)),
+            }
+            for p in ("online", "offline")
+        }
         return {
             "batches": len(pend),
             "rows": int(sum(b.rows for b in pend)),
             "oldest_pending_creation_ts": (
                 min(b.creation_ts for b in pend) if pend else None
             ),
+            "planes": planes,
         }
 
 
 class GeoReplicator:
-    """Async applier: drains the home store's replication log into replica
-    stores over the modeled WAN, tracks lag, and replays on fail-over."""
+    """Async applier: drains the home stores' replication log into replica
+    stores (both planes) over the modeled WAN, tracks lag, and replays on
+    fail-over."""
 
     def __init__(
         self,
@@ -216,6 +294,7 @@ class GeoReplicator:
         *,
         topology: GeoTopology,
         home_region: str,
+        home_offline: Optional[OfflineStore] = None,
         log: Optional[ReplicationLog] = None,
         clock: Optional[Callable[[], int]] = None,
         monitor=None,
@@ -226,23 +305,49 @@ class GeoReplicator:
         self.clock = clock or (lambda: 0)
         self.monitor = monitor
         self.stores: dict[str, OnlineStore] = {home_region: home_store}
+        # offline plane is optional: a standalone online-only replicator
+        # (benchmarks, tests) never publishes offline batches
+        self.offline_stores: dict[str, OfflineStore] = {}
         self.shipped: dict[str, dict] = {}
         self._specs: dict[tuple[str, int], FeatureSetSpec] = {}
         home_store.merge_listeners.append(self._on_home_merge)
+        if home_offline is not None:
+            self.offline_stores[home_region] = home_offline
+            home_offline.merge_listeners.append(self._on_home_offline_merge)
 
     # -- publish (home side) ------------------------------------------------
-    def _on_home_merge(self, spec: FeatureSetSpec, stats: dict) -> None:
-        """Home-store merge listener: append the batch's reduced winning
-        writes to the log and annotate the stats with the assigned seq.
+    def _publish(self, payload: tuple, plane: str, columns=None) -> int:
+        """Append one reduced batch to the log, degrading under
+        backpressure.  The home store has ALREADY applied this batch by the
+        time a listener fires, so the append must never lose it: when the
+        log is full, backpressure degrades async replication to a
+        synchronous drain of every healthy replica — the drain applies
+        BOTH planes, so a mixed online/offline tail is fully accounted
+        (cursors advance over every batch, freeing the prefix) before
+        concluding that a replica pins the log; only if an UNHEALTHY
+        replica still pins the tail is the batch force-appended — the log
+        temporarily exceeds capacity (surfaced via the
+        ``replication/log_force_appends`` counter) rather than diverging
+        the replicas forever."""
+        try:
+            batch = self.log.append(*payload, plane=plane, columns=columns)
+        except ReplicationLogFull:
+            for region in self.replica_regions():
+                if self.topology.regions[region].healthy:
+                    self.drain(region)
+            try:
+                batch = self.log.append(*payload, plane=plane, columns=columns)
+            except ReplicationLogFull:
+                batch = self.log.append(
+                    *payload, plane=plane, columns=columns, force=True
+                )
+                if self.monitor is not None:
+                    self.monitor.system.inc("replication/log_force_appends")
+        return batch.seq
 
-        The home store has ALREADY applied this batch by the time the
-        listener fires, so the append must never lose it: when the log is
-        full, backpressure degrades async replication to a synchronous
-        drain of every healthy replica (advancing their cursors frees the
-        prefix); if an UNHEALTHY replica still pins the tail, the batch is
-        force-appended — the log temporarily exceeds capacity (surfaced via
-        the ``replication/log_force_appends`` counter) rather than
-        diverging the replicas forever."""
+    def _on_home_merge(self, spec: FeatureSetSpec, stats: dict) -> None:
+        """Home ONLINE-store merge listener: append the batch's reduced
+        winning writes to the log and annotate the stats with the seq."""
         self._specs[spec.key] = spec
         keys = stats.get("touched_keys")
         if keys is None or len(keys) == 0:
@@ -255,69 +360,166 @@ class GeoReplicator:
             stats["touched_event_ts"],
             stats["touched_values"],
         )
-        try:
-            batch = self.log.append(*payload)
-        except ReplicationLogFull:
-            for region in self.replica_regions():
-                if self.topology.regions[region].healthy:
-                    self.drain(region)
-            try:
-                batch = self.log.append(*payload)
-            except ReplicationLogFull:
-                batch = self.log.append(*payload, force=True)
-                if self.monitor is not None:
-                    self.monitor.system.inc("replication/log_force_appends")
-        stats["replication_seq"] = batch.seq
+        stats["replication_seq"] = self._publish(payload, "online")
+
+    def _on_home_offline_merge(self, spec: FeatureSetSpec, stats: dict) -> None:
+        """Home OFFLINE-store merge listener: ship the rows the merge
+        actually inserted (post full-key dedup) as an offline-plane batch."""
+        self._specs[spec.key] = spec
+        keys = stats.get("inserted_keys")
+        if keys is None or len(keys) == 0:
+            stats["replication_seq"] = None  # fully-deduped batch: no-op
+            return
+        payload = (
+            spec.key,
+            stats["creation_ts"],
+            keys,
+            stats["inserted_event_ts"],
+            np.empty((len(keys), 0), np.float32),
+        )
+        stats["replication_seq"] = self._publish(
+            payload, "offline", columns=stats["inserted_columns"]
+        )
 
     # -- replica membership --------------------------------------------------
     def replica_regions(self) -> list[str]:
         return [r for r in self.stores if r != self.home_region]
 
-    def add_replica(self, region: str, store: OnlineStore) -> None:
+    def add_replica(
+        self,
+        region: str,
+        store: OnlineStore,
+        offline_store: Optional[OfflineStore] = None,
+    ) -> int:
+        """Start tracking a replica; its single cursor (both planes) starts
+        at the current head — the snapshot-cut sequence number the caller's
+        ``bootstrap_delta`` streams state up to.  Returns that cut."""
         if region in self.stores:
             raise ValueError(f"region {region} already has a store")
+        # the replica set must be plane-homogeneous: an online-only replica
+        # under an offline-publishing home would crash every drain (and, via
+        # the backpressure fallback, the home write path) on its first
+        # offline batch — and an offline-capable replica under an
+        # online-only home would set up the same crash for its siblings the
+        # moment promote() makes it the publisher
+        home_offline = self.home_region in self.offline_stores
+        if offline_store is None and home_offline:
+            raise ValueError(
+                f"home {self.home_region} replicates the offline plane; "
+                f"replica {region} must provide an offline store too"
+            )
+        if offline_store is not None and not home_offline:
+            raise ValueError(
+                f"home {self.home_region} does not replicate the offline "
+                f"plane; construct GeoReplicator with home_offline or drop "
+                f"replica {region}'s offline store"
+            )
         self.stores[region] = store
-        self.log.register_replica(region)
-        self.shipped[region] = {"batches": 0, "rows": 0, "bytes": 0, "ms": 0.0}
+        if offline_store is not None:
+            self.offline_stores[region] = offline_store
+        cut = self.log.register_replica(region)
+        self.shipped[region] = {
+            "batches": 0,
+            "rows": 0,
+            "bytes": 0,
+            "ms": 0.0,
+            "by_plane": {
+                p: {"batches": 0, "rows": 0, "bytes": 0}
+                for p in ("online", "offline")
+            },
+        }
+        return cut
 
-    def bootstrap_snapshot(self, region: str, spec: FeatureSetSpec) -> int:
-        """Copy one table's CURRENT home state into a new replica — the
-        §4.5.5-style bootstrap for replicas added after data exists.  The
-        dump is replayed as reduced batches grouped by creation_ts (a
-        ``merge_reduced`` batch shares one creation_ts); overlap with
-        batches already in the log is safe by idempotence."""
-        home = self.stores[self.home_region]
-        store = self.stores[region]
-        dump = home.dump_all(spec.name, spec.version)
-        if len(dump) == 0:
+    def bootstrap_delta(
+        self, region: str, spec: FeatureSetSpec, *, chunk_rows: int = 65_536
+    ) -> dict:
+        """Stream one table's home state AS OF the replica's registration
+        cut into the new replica, in bounded ``chunk_rows`` pieces — the
+        delta bootstrap: snapshot cut at a log sequence number (the cursor
+        ``add_replica`` registered) + normal catch-up draining from that
+        cursor.  A late replica therefore never holds a full second copy in
+        flight, batches appended during the stream overlap it harmlessly
+        (per-plane idempotence), and an interrupted stream is simply
+        retried — ``apply_chunks``/``merge_reduced`` make re-application a
+        no-op.  Returns per-plane bootstrapped row counts."""
+        out = {"online_rows": 0, "offline_rows": 0, "chunks": 0}
+        home_online = self.stores[self.home_region]
+        store = self.stores.get(region)
+        if (
+            store is not None
+            and spec.materialization.online_enabled
+            and home_online.has(spec.name, spec.version)
+        ):
             store.register(spec)
-            return 0
-        keys = dump["__key__"]
-        event_ts = dump[EVENT_TS]
-        creation_ts = dump[CREATION_TS]
-        values = dump.column_stack([f.name for f in spec.features], np.float32)
-        for cr in np.unique(creation_ts):
-            m = creation_ts == cr
-            store.merge_reduced(spec, keys[m], event_ts[m], values[m], int(cr))
-        return len(keys)
+            dump = home_online.dump_all(spec.name, spec.version)
+            if len(dump):
+                keys = dump["__key__"]
+                event_ts = dump[EVENT_TS]
+                creation_ts = dump[CREATION_TS]
+                values = dump.column_stack([f.name for f in spec.features], np.float32)
+                for cr in np.unique(creation_ts):
+                    idx = np.flatnonzero(creation_ts == cr)
+                    for lo in range(0, len(idx), chunk_rows):
+                        sl = idx[lo : lo + chunk_rows]
+                        store.merge_reduced(
+                            spec, keys[sl], event_ts[sl], values[sl], int(cr)
+                        )
+                        out["online_rows"] += len(sl)
+                        out["chunks"] += 1
+        home_offline = self.offline_stores.get(self.home_region)
+        offline = self.offline_stores.get(region)
+        if (
+            offline is not None
+            and home_offline is not None
+            and spec.materialization.offline_enabled
+            and home_offline.has(spec.name, spec.version)
+        ):
+            offline.register(spec)
+            for chunk in home_offline.export_chunks(
+                spec.name, spec.version, max_rows=chunk_rows
+            ):
+                if len(chunk) == 0:
+                    continue
+                cols = {
+                    k: chunk[k]
+                    for k in chunk.names
+                    if k not in ("__key__", EVENT_TS, CREATION_TS)
+                }
+                offline.apply_chunks(
+                    spec, chunk["__key__"], chunk[EVENT_TS], chunk[CREATION_TS], cols
+                )
+                out["offline_rows"] += len(chunk)
+                out["chunks"] += 1
+        return out
 
     # -- apply (replica side) -------------------------------------------------
     def apply_batch(self, region: str, batch: ReplicatedBatch) -> dict:
-        """Ship + apply ONE batch to a replica and acknowledge it.  Exposed
-        so tests can drive out-of-order delivery; ``drain`` is the in-order
-        fast path."""
+        """Ship + apply ONE batch (either plane) to a replica and
+        acknowledge it.  Exposed so tests can drive out-of-order delivery;
+        ``drain`` is the in-order fast path."""
         spec = self._specs[batch.table]
-        stats = self.stores[region].merge_reduced(
-            spec, batch.keys, batch.event_ts, batch.values, batch.creation_ts
-        )
+        if batch.plane == "offline":
+            stats = self.offline_stores[region].apply_chunks(
+                spec, batch.keys, batch.event_ts, batch.creation_ts, batch.columns
+            )
+        else:
+            stats = self.stores[region].merge_reduced(
+                spec, batch.keys, batch.event_ts, batch.values, batch.creation_ts
+            )
         self.log.ack(region, batch.seq)
         ship = self.shipped[region]
         ship["batches"] += 1
         ship["rows"] += batch.rows
         ship["bytes"] += batch.nbytes
         ship["ms"] += self.topology.transfer_ms(self.home_region, region, batch.nbytes)
+        plane = ship["by_plane"][batch.plane]
+        plane["batches"] += 1
+        plane["rows"] += batch.rows
+        plane["bytes"] += batch.nbytes
         if self.monitor is not None:
-            self.monitor.record_replication_ship(batch.nbytes, batch.rows)
+            self.monitor.record_replication_ship(
+                batch.nbytes, batch.rows, plane=batch.plane
+            )
         return stats
 
     def drain(
@@ -350,11 +552,18 @@ class GeoReplicator:
         return self.log.pending_count(region)
 
     def lag(self, region: str) -> dict:
-        """Replication lag of one region: un-acked batches/rows plus
-        staleness in clock units (0 when fully caught up).  The home region
-        is by definition in sync."""
+        """Replication lag of one region: un-acked batches/rows (combined +
+        per plane) plus staleness in clock units (0 when fully caught up).
+        The home region is by definition in sync."""
         if region == self.home_region:
-            return {"batches": 0, "rows": 0, "staleness_ms": 0}
+            return {
+                "batches": 0,
+                "rows": 0,
+                "staleness_ms": 0,
+                "planes": {
+                    p: {"batches": 0, "rows": 0} for p in ("online", "offline")
+                },
+            }
         raw = self.log.lag(region)
         oldest = raw.pop("oldest_pending_creation_ts")
         raw["staleness_ms"] = (
@@ -369,10 +578,13 @@ class GeoReplicator:
     # -- fail-over replay -------------------------------------------------------
     def promote(self, region: str) -> dict:
         """Data-plane half of fail-over: replay the promoted replica's
-        un-acked log suffix into its store (Algorithm-2 idempotence makes
-        any overlap with already-applied batches a no-op), then make it the
-        new home — its merges now feed the log for the remaining replicas,
-        whose cursors carry over untouched."""
+        un-acked log suffix into its stores — BOTH planes (per-plane
+        idempotence makes any overlap with already-applied batches a
+        no-op) — then make it the new home: its online AND offline merges
+        now feed the log for the remaining replicas, whose cursors carry
+        over untouched.  The lost ex-home's stores leave the replica set;
+        a recovered ex-home rejoins via the delta-bootstrap path
+        (``GeoFeatureStore.rejoin``)."""
         if region == self.home_region:
             return {"replayed_batches": 0, "replayed_rows": 0}
         if region not in self.stores:
@@ -383,11 +595,20 @@ class GeoReplicator:
             old_home.merge_listeners.remove(self._on_home_merge)
         except ValueError:
             pass
+        old_offline = self.offline_stores.pop(self.home_region, None)
+        if old_offline is not None:
+            try:
+                old_offline.merge_listeners.remove(self._on_home_offline_merge)
+            except ValueError:
+                pass
         del self.stores[self.home_region]
         self.log.drop_replica(region)
         self.shipped.pop(region, None)
         self.home_region = region
         self.stores[region].merge_listeners.append(self._on_home_merge)
+        new_offline = self.offline_stores.get(region)
+        if new_offline is not None:
+            new_offline.merge_listeners.append(self._on_home_offline_merge)
         return {
             "replayed_batches": replay["applied_batches"],
             "replayed_rows": replay["applied_rows"],
@@ -396,15 +617,19 @@ class GeoReplicator:
 
 class GeoFeatureStore:
     """Read/write router over a home ``FeatureStore`` plus geo-replicated
-    online serving replicas.
+    replicas of BOTH store planes.
 
     Writes (materialization ticks, backfills, direct merges) always land in
-    the home region; a listener streams every online merge's reduced batch
-    into the replication log.  Online reads route to the nearest IN-SYNC
-    region (lag <= ``max_lag_batches``), preferring the consumer's own
-    region — the paper's local-read latency win.  ``failover`` composes the
-    placement decision (nearest healthy replica) with the log replay that
-    makes the promoted store byte-identical to the lost home.
+    the home region; listeners stream every online merge's reduced batch
+    AND every offline merge's inserted rows into the one replication log.
+    Online reads route to the nearest IN-SYNC region (lag <=
+    ``max_lag_batches``), preferring the consumer's own region — the
+    paper's local-read latency win.  ``failover`` composes the placement
+    decision (nearest healthy replica) with the log replay that makes the
+    promoted region's online store byte-identical and its offline store
+    chunk-set-identical to the lost home, then re-points both of the home
+    ``FeatureStore``'s planes at the promoted stores.  ``rejoin`` re-admits
+    a recovered ex-home through the delta-bootstrap path.
     """
 
     def __init__(
@@ -435,11 +660,13 @@ class GeoFeatureStore:
             self.fs.online,
             topology=topology,
             home_region=home_region,
+            home_offline=self.fs.offline,
             log=self.log,
             clock=self.fs.clock,
             monitor=self.fs.monitor,
         )
         self.fs.attach_replication(self.replicator)
+        self.last_bootstrap: Optional[dict] = None
         for region in replica_regions:
             self.add_replica(region)
 
@@ -452,34 +679,66 @@ class GeoFeatureStore:
         return getattr(self.fs, name)
 
     # -- membership ----------------------------------------------------------
-    def add_replica(self, region: str) -> OnlineStore:
-        """Create an online serving replica in ``region``: compliance-check
-        placement, clone the home store's configuration, snapshot-bootstrap
-        every online table, and start cursor-tracking new batches."""
+    def add_replica(self, region: str, *, chunk_rows: int = 65_536) -> OnlineStore:
+        """Create a two-plane replica in ``region``: compliance-check
+        placement, clone both home stores' configuration, delta-bootstrap
+        every table (snapshot cut at the registered cursor, streamed in
+        bounded ``chunk_rows`` pieces), and start cursor-tracking new
+        batches.  Returns the replica's online store; bootstrap stats land
+        in ``last_bootstrap``."""
         self.placement.add_replica(region)  # ComplianceError when geo-fenced
         home = self.fs.online
+        home_off = self.fs.offline
         store = OnlineStore(
             num_partitions=home.num_partitions,
             initial_capacity=home.initial_capacity,
             interpret=home.interpret,
             merge_engine=home.merge_engine,
         )
-        self.replicator.add_replica(region, store)
+        offline = OfflineStore(
+            num_shards=home_off.num_shards,
+            time_partition=home_off.time_partition,
+            merge_engine=home_off.merge_engine,
+            compact_threshold=home_off.compact_threshold,
+        )
+        cut = self.replicator.add_replica(region, store, offline)
+        totals = {"cut_seq": cut, "online_rows": 0, "offline_rows": 0, "chunks": 0}
         for n, v in self.fs.registry.list_feature_sets():
             spec = self.fs.registry.get_feature_set(n, v)
-            if spec.materialization.online_enabled and home.has(n, v):
-                self.replicator.bootstrap_snapshot(region, spec)
+            got = self.replicator.bootstrap_delta(region, spec, chunk_rows=chunk_rows)
+            for k in ("online_rows", "offline_rows", "chunks"):
+                totals[k] += got[k]
+        self.last_bootstrap = totals
         return store
+
+    def rejoin(self, region: str, *, chunk_rows: int = 65_536) -> dict:
+        """Re-admit a recovered ex-home (or any previously-dropped region)
+        as a replica: fresh stores, delta bootstrap of BOTH planes, cursor
+        at the snapshot cut — the reverse of failover's prune, so a region
+        whose stores were lost at promotion returns to the serving set
+        instead of being gone forever.  Requires the region healthy again
+        (``mark_up``).  Returns the bootstrap stats."""
+        if region not in self.topology.regions:
+            raise ValueError(f"unknown region {region}")
+        if not self.topology.regions[region].healthy:
+            raise RegionDownError(f"region {region} is still down; mark_up first")
+        if region in self.replicator.stores:
+            raise ValueError(f"region {region} is already in the serving set")
+        self.add_replica(region, chunk_rows=chunk_rows)
+        return {"rejoined": region, **self.last_bootstrap}
 
     # -- asset management ------------------------------------------------------
     def create_feature_set(self, spec: FeatureSetSpec) -> FeatureSetSpec:
-        """Register with the home store, then pre-register the (empty) table
-        on every replica so a relaxed-staleness read can serve before the
-        first batch arrives."""
+        """Register with the home store, then pre-register the (empty)
+        tables on every replica — both planes — so a relaxed-staleness read
+        can serve before the first batch arrives."""
         spec = self.fs.create_feature_set(spec)
-        if spec.materialization.online_enabled:
-            for region in self.replicator.replica_regions():
+        for region in self.replicator.replica_regions():
+            if spec.materialization.online_enabled:
                 self.replicator.stores[region].register(spec)
+            offline = self.replicator.offline_stores.get(region)
+            if offline is not None and spec.materialization.offline_enabled:
+                offline.register(spec)
         return spec
 
     # -- writes (home region) -------------------------------------------------
@@ -548,13 +807,14 @@ class GeoFeatureStore:
     def failover(self) -> Optional[dict]:
         """Promote the nearest healthy replica when the home region is down:
         placement re-points (regions.py), the replicator replays the
-        promoted replica's un-acked suffix, and the home ``FeatureStore``
-        adopts the promoted store as its online plane — so materialization
-        resumes against the new primary.  The dead ex-home leaves the
-        serving set entirely (its store is gone; a LATER failover must
-        never promote it) — if it recovers, ``add_replica`` re-admits it
-        via snapshot bootstrap.  Returns promotion info, or None when the
-        home region is healthy."""
+        promoted replica's un-acked suffix — BOTH planes — and the home
+        ``FeatureStore`` adopts the promoted stores as its online AND
+        offline planes, so materialization and training reads resume
+        against the new primary without offline/online skew.  The dead
+        ex-home leaves the serving set entirely (its stores are gone; a
+        LATER failover must never promote it) — if it recovers, ``rejoin``
+        re-admits it via delta bootstrap.  Returns promotion info, or None
+        when the home region is healthy."""
         old_home = self.home_region
         new_home = self.placement.failover()
         if new_home is None:
@@ -564,4 +824,8 @@ class GeoFeatureStore:
         promoted = self.replicator.stores[new_home]
         self.fs.online = promoted
         self.fs.materializer.online = promoted
+        promoted_offline = self.replicator.offline_stores.get(new_home)
+        if promoted_offline is not None:
+            self.fs.offline = promoted_offline
+            self.fs.materializer.offline = promoted_offline
         return {"promoted": new_home, **replay}

@@ -228,9 +228,7 @@ class Scheduler:
                 f"scheduling invariant violated: overlapping active window "
                 f"{window} for {key}"
             )
-        job = MaterializationJob(
-            self._next_job_id, key[0], key[1], window, kind
-        )
+        job = MaterializationJob(self._next_job_id, key[0], key[1], window, kind)
         self._next_job_id += 1
         self.jobs[job.job_id] = job
         return job
@@ -316,9 +314,7 @@ class Scheduler:
     def mark_succeeded(self, job_id: int) -> None:
         j = self.jobs[job_id]
         j.state = JobState.SUCCEEDED
-        self.data_state[(j.feature_set, j.version)].add(
-            j.window.start, j.window.end
-        )
+        self.data_state[(j.feature_set, j.version)].add(j.window.start, j.window.end)
 
     def mark_failed(self, job_id: int, error: str) -> bool:
         """Returns True if the job will be retried (back to QUEUED)."""

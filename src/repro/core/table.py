@@ -111,9 +111,7 @@ class Table:
             return np.zeros((len(self), 0), dtype)
         # np.stack copies anyway; asarray avoids a second copy per column
         # when the dtype already matches
-        return np.stack(
-            [np.asarray(self.columns[n], dtype) for n in names], axis=1
-        )
+        return np.stack([np.asarray(self.columns[n], dtype) for n in names], axis=1)
 
     def copy(self) -> "Table":
         return Table({k: v.copy() for k, v in self.columns.items()})

@@ -24,6 +24,7 @@ from repro.core.assets import (
     MaterializationSettings,
 )
 from repro.core.dsl import DslTransform, RollingAgg, UDFTransform
+from repro.core.offline_store import CREATION_TS, EVENT_TS, OfflineStore
 from repro.core.online_store import OnlineStore
 from repro.core.regions import ComplianceError, GeoTopology, Region, RegionDownError
 from repro.core.replication import (
@@ -64,6 +65,26 @@ def assert_dumps_identical(a: OnlineStore, b: OnlineStore, spec, ctx=""):
     assert set(da.names) == set(db.names), ctx
     for name in da.names:
         np.testing.assert_array_equal(da[name], db[name], err_msg=f"{ctx}: {name}")
+
+
+def assert_offline_identical(a: OfflineStore, b: OfflineStore, spec, ctx=""):
+    """Chunk-set equivalence: same full-key set and values, independent of
+    chunk boundaries (canonical_history sorts by the full record key)."""
+    da = a.canonical_history(spec.name, spec.version)
+    db = b.canonical_history(spec.name, spec.version)
+    assert set(da.names) == set(db.names), ctx
+    assert len(da) == len(db), f"{ctx}: {len(da)} vs {len(db)} rows"
+    for name in da.names:
+        np.testing.assert_array_equal(da[name], db[name], err_msg=f"{ctx}: {name}")
+
+
+def assert_planes_identical(g: GeoFeatureStore, region: str, spec, ctx=""):
+    assert_dumps_identical(
+        g.fs.online, g.replicator.stores[region], spec, f"{ctx} [online]"
+    )
+    assert_offline_identical(
+        g.fs.offline, g.replicator.offline_stores[region], spec, f"{ctx} [offline]"
+    )
 
 
 def topo(fenced_home=False):
@@ -193,6 +214,10 @@ def test_log_lag_under_out_of_order_acks():
         "batches": 4,
         "rows": 12,
         "oldest_pending_creation_ts": 1_000,
+        "planes": {
+            "online": {"batches": 4, "rows": 12},
+            "offline": {"batches": 0, "rows": 0},
+        },
     }
     log.ack("r", 2)  # out of order: cursor must NOT advance
     assert log.cursors["r"] == 0
@@ -206,6 +231,10 @@ def test_log_lag_under_out_of_order_acks():
         "batches": 1,
         "rows": 3,
         "oldest_pending_creation_ts": 1_003,
+        "planes": {
+            "online": {"batches": 1, "rows": 3},
+            "offline": {"batches": 0, "rows": 0},
+        },
     }
     log.ack("r", 3)
     assert log.lag("r")["batches"] == 0
@@ -240,6 +269,41 @@ def test_log_unregistered_replica_truncates_everything():
     _log_batch(log, 1)
     _log_batch(log, 2)  # no cursors: acked-by-all is vacuously true
     assert len(log) <= 2
+
+
+def _offline_log_batch(log, seq_hint=0, rows=2):
+    return log.append(
+        ("fs", 1),
+        2_000 + seq_hint,
+        np.arange(rows, dtype=np.int64),
+        np.arange(rows, dtype=np.int64),
+        np.empty((rows, 0), np.float32),
+        plane="offline",
+        columns={"entity_id": np.arange(rows, dtype=np.int64)},
+    )
+
+
+def test_log_mixed_plane_truncation_counts_both_planes():
+    """Regression (ISSUE 4 satellite): an un-acked OFFLINE batch pins the
+    tail exactly like an online one — truncation accounting and the
+    per-plane lag breakdown must see both planes."""
+    log = ReplicationLog(capacity=2)
+    log.register_replica("r")
+    _offline_log_batch(log, 0)
+    _log_batch(log, 1)
+    log.ack("r", 1)  # online half acked (out of order); offline still pins
+    with pytest.raises(ReplicationLogFull):
+        _log_batch(log, 2)
+    assert [b.plane for b in log.pending("r")] == ["offline"]
+    lag = log.lag("r")
+    assert lag["planes"] == {
+        "online": {"batches": 0, "rows": 0},
+        "offline": {"batches": 1, "rows": 2},
+    }
+    log.ack("r", 0)  # both planes acked -> append truncates the prefix
+    _log_batch(log, 2)
+    assert [b.seq for b in log.pending("r")] == [2]
+    assert log.lag("r")["planes"]["offline"] == {"batches": 0, "rows": 0}
 
 
 # -- geo feature store: routing, lag gating, compliance -----------------------
@@ -292,22 +356,27 @@ def test_lag_metrics_surface_in_monitor():
 def test_snapshot_bootstrap_of_late_replica():
     g = geo_store()
     g.tick(now=3 * HOUR)  # home has state before any replica exists
-    g.add_replica("near")
-    assert g.lag("near")["batches"] == 0  # snapshot, not log replay
-    assert_dumps_identical(
-        g.fs.online,
-        g.replicator.stores["near"],
-        g.registry.get_feature_set("act", 1),
-        "snapshot bootstrap",
-    )
+    g.add_replica("near", chunk_rows=16)  # bounded delta chunks, not one dump
+    spec = g.registry.get_feature_set("act", 1)
+    assert g.lag("near")["batches"] == 0  # snapshot cut at head, not replay
+    assert g.last_bootstrap["online_rows"] > 0
+    assert g.last_bootstrap["offline_rows"] > 0
+    assert g.last_bootstrap["chunks"] > 2  # actually streamed in pieces
+    assert_planes_identical(g, "near", spec, "delta bootstrap")
 
 
 def test_materializer_outcomes_carry_replication_seq():
     g = geo_store(replica_regions=("near",))
     g.tick(now=HOUR)
-    seqs = [o.online_stats["replication_seq"] for o in g.fs.materializer.outcomes]
+    outcomes = g.fs.materializer.outcomes
+    seqs = [o.online_stats["replication_seq"] for o in outcomes]
     assert seqs == sorted(seqs)
     assert all(s is not None for s in seqs)
+    off_seqs = [o.offline_stats["replication_seq"] for o in outcomes]
+    assert all(s is not None for s in off_seqs)
+    # the paper's fixed merge order: each job's offline batch precedes its
+    # online batch in the one shared log sequence
+    assert all(off < on for off, on in zip(off_seqs, seqs))
 
 
 def test_publisher_backpressure_degrades_to_sync_drain():
@@ -380,14 +449,165 @@ def test_second_failover_skips_the_dead_ex_home():
     assert route == {"region": "home", "modeled_ms": 1.0}
 
 
+# -- offline plane: ship, delta bootstrap, rejoin (ISSUE 4) -------------------
+
+
+def test_offline_plane_replicates_on_drain():
+    g = geo_store(replica_regions=("near",))
+    g.tick(now=2 * HOUR)
+    spec = g.registry.get_feature_set("act", 1)
+    lag = g.lag("near")
+    assert lag["planes"]["offline"]["batches"] > 0  # offline batches ship too
+    assert lag["planes"]["online"]["batches"] > 0
+    gauges = g.fs.monitor.system.snapshot()["gauges"]
+    assert gauges["replication/lag_batches/offline/near"] > 0
+    g.drain()
+    assert_planes_identical(g, "near", spec, "post-drain")
+    counters = g.fs.monitor.system.counters
+    assert counters["replication/shipped_bytes/offline"] > 0
+    assert counters["replication/shipped_bytes/online"] > 0
+
+
+@pytest.mark.parametrize("engine", ["loop", "vector"])
+def test_offline_shipped_batches_rebuild_identical_history(engine):
+    """The inserted-rows stats a home offline merge reports are exactly the
+    shipping unit: applying them alone (re-delivered, even) rebuilds a
+    chunk-set-identical replica."""
+    spec = make_spec()
+    rng = np.random.default_rng(5)
+    home = OfflineStore(num_shards=4, merge_engine=engine)
+    shipped = []
+    home.merge_listeners.append(lambda s, st: shipped.append(st))
+    for i in range(5):
+        # overlapping frames so later merges hit the full-key dedup path
+        home.merge(spec, make_frame(rng, 60, 25, 40 * (i + 1)), 10**6 + i)
+        home.merge(spec, make_frame(rng, 30, 25, 40 * (i + 1)), 10**6 + 100 + i)
+    assert sum(st["inserted"] for st in shipped) == home.num_rows("fs", 1)
+    replica = OfflineStore(num_shards=4)
+    for st in shipped + shipped:  # at-least-once delivery: ship every batch twice
+        out = replica.apply_chunks(
+            spec,
+            st["inserted_keys"],
+            st["inserted_event_ts"],
+            st["creation_ts"],
+            st["inserted_columns"],
+        )
+        assert out["applied"] <= st["inserted"]
+    assert_offline_identical(home, replica, spec, f"reduced replay ({engine})")
+
+
+def test_online_only_replica_rejected_when_home_publishes_offline():
+    """A replica without an offline store would crash the first offline
+    drain (and, via the backpressure fallback, the home write path) — the
+    replicator must reject it up front."""
+    g = geo_store()
+    with pytest.raises(ValueError, match="offline store"):
+        g.replicator.add_replica("near", OnlineStore())
+
+
+def test_offline_replica_rejected_when_home_is_online_only():
+    """The mirror-image misconfiguration: an offline-capable replica under
+    an online-only home becomes the crash once promote() makes IT the
+    publisher — the replica set must stay plane-homogeneous."""
+    from repro.core.replication import GeoReplicator
+
+    rep = GeoReplicator(OnlineStore(), topology=topo(), home_region="home")
+    with pytest.raises(ValueError, match="offline"):
+        rep.add_replica("near", OnlineStore(), OfflineStore())
+    rep.add_replica("near", OnlineStore())  # online-only set stays fine
+
+
+def test_delta_bootstrap_interrupted_and_retried_is_idempotent():
+    """A bootstrap stream that dies mid-way and is retried from scratch must
+    not duplicate offline chunks or disturb online latest-wins."""
+    g = geo_store()
+    g.tick(now=4 * HOUR)
+    spec = g.registry.get_feature_set("act", 1)
+    g.placement.add_replica("near")
+    store = OnlineStore(num_partitions=g.fs.online.num_partitions)
+    offline = OfflineStore(num_shards=g.fs.offline.num_shards)
+    rep = g.replicator
+    rep.add_replica("near", store, offline)
+    # interrupted stream: only a prefix of the offline chunks lands
+    chunks = list(g.fs.offline.export_chunks("act", 1, max_rows=16))
+    assert len(chunks) > 2
+    offline.register(spec)
+    for chunk in chunks[: len(chunks) // 2]:
+        cols = {
+            k: chunk[k]
+            for k in chunk.names
+            if k not in ("__key__", EVENT_TS, CREATION_TS)
+        }
+        offline.apply_chunks(
+            spec, chunk["__key__"], chunk[EVENT_TS], chunk[CREATION_TS], cols
+        )
+    partial = offline.num_rows("act", 1)
+    assert 0 < partial < g.fs.offline.num_rows("act", 1)
+    # retry = full re-stream; overlap with the partial prefix is a no-op
+    rep.bootstrap_delta("near", spec, chunk_rows=16)
+    assert_offline_identical(g.fs.offline, offline, spec, "retried bootstrap")
+    assert_dumps_identical(g.fs.online, store, spec, "retried bootstrap [online]")
+    # a second full retry inserts nothing (no duplicate chunks)
+    before = offline.num_rows("act", 1)
+    out = rep.bootstrap_delta("near", spec, chunk_rows=16)
+    assert offline.num_rows("act", 1) == before
+    assert out["offline_rows"] == before  # streamed again, all deduped
+    assert g.lag("near")["batches"] == 0
+
+
+def test_rejoin_after_failover_converges_both_planes():
+    """The recovered ex-home rejoins via the delta-bootstrap path and
+    becomes a first-class replica of BOTH planes again."""
+    g = geo_store(replica_regions=("near", "far"))
+    spec = g.registry.get_feature_set("act", 1)
+    g.tick(now=2 * HOUR)  # leaves an un-drained suffix
+    g.mark_down("home")
+    assert g.failover()["promoted"] == "near"
+    g.tick(now=4 * HOUR)  # the new primary keeps materializing
+    with pytest.raises(RegionDownError):
+        g.rejoin("home")  # still down: must mark_up first
+    g.mark_up("home")
+    info = g.rejoin("home")
+    assert info["rejoined"] == "home"
+    assert info["online_rows"] > 0 and info["offline_rows"] > 0
+    g.drain()
+    assert_planes_identical(g, "home", spec, "rejoined ex-home")
+    # and it keeps receiving new batches like any replica
+    g.tick(now=6 * HOUR)
+    g.drain()
+    assert_planes_identical(g, "home", spec, "rejoined steady-state")
+    ids = [np.arange(40, dtype=np.int64)]
+    _, _, route = g.get_online_features("act", 1, ids, consumer_region="home")
+    assert route == {"region": "home", "modeled_ms": 1.0}  # serving locally
+    with pytest.raises(ValueError):
+        g.rejoin("near")  # already in the serving set
+
+
+def test_mixed_plane_backpressure_counts_both_planes():
+    """Regression (ISSUE 4 satellite): with a tiny log, every job's offline
+    AND online batches hit backpressure; the sync-drain fallback must drain
+    both planes of the healthy replica — if it skipped one, the cursor
+    would never free the prefix and force-appends would fire."""
+    g = geo_store(replica_regions=("near",), log_capacity=1)
+    for h in range(2, 10, 2):
+        g.tick(now=h * HOUR)
+    assert g.fs.monitor.system.counters.get("replication/log_force_appends", 0) == 0
+    spec = g.registry.get_feature_set("act", 1)
+    g.drain()
+    assert_planes_identical(g, "near", spec, "mixed-plane backpressure")
+    assert len(g.log) <= 1
+
+
 # -- the two-region end-to-end scenario (acceptance) --------------------------
 
 
 def test_two_region_scenario_with_failover_replay():
     """Materialize at home; drain; serve identical rows locally from the
     replica; keep materializing WITHOUT draining (un-acked suffix); kill
-    home; failover replays the suffix and the promoted store's dump_all is
-    byte-identical to the home store's pre-failure state."""
+    home; failover replays the suffix on BOTH planes — the promoted online
+    store's dump_all is byte-identical and its offline store chunk-set-
+    identical to the lost home — then the recovered ex-home rejoins and
+    converges on both planes."""
     g = geo_store(replica_regions=("near", "far"))
     spec = g.registry.get_feature_set("act", 1)
     ids = [np.arange(40, dtype=np.int64)]
@@ -408,7 +628,9 @@ def test_two_region_scenario_with_failover_replay():
     # more materialization the replicas have NOT applied yet
     g.tick(now=6 * HOUR)
     assert g.lag("near")["batches"] > 0
+    assert g.lag("near")["planes"]["offline"]["batches"] > 0
     pre_failure = g.fs.online.dump_all("act", 1)
+    pre_failure_off = g.fs.offline.canonical_history("act", 1)
 
     g.mark_down("home")
     with pytest.raises(RegionDownError):
@@ -424,13 +646,33 @@ def test_two_region_scenario_with_failover_replay():
     for name in post.names:
         np.testing.assert_array_equal(post[name], pre_failure[name], err_msg=name)
 
+    # offline plane followed: the promoted region's offline store holds the
+    # lost home's exact history (same full-key set and values), and the
+    # home FeatureStore's offline plane IS that store now
+    promoted_off = g.replicator.offline_stores["near"]
+    assert g.fs.offline is promoted_off
+    assert g.fs.materializer.offline is promoted_off
+    post_off = promoted_off.canonical_history("act", 1)
+    assert set(post_off.names) == set(pre_failure_off.names)
+    assert len(post_off) == len(pre_failure_off)
+    for name in post_off.names:
+        np.testing.assert_array_equal(
+            post_off[name], pre_failure_off[name], err_msg=name
+        )
+
     # the surviving replica keeps replicating from the new home
     g.tick(now=7 * HOUR)
     g.drain()
-    assert_dumps_identical(
-        promoted, g.replicator.stores["far"], spec, "post-failover chain"
-    )
+    assert_planes_identical(g, "far", spec, "post-failover chain")
     vals2, found2, route2 = g.get_online_features(
         "act", 1, ids, consumer_region="far"
     )
     assert route2 == {"region": "far", "modeled_ms": 1.0}
+
+    # the recovered ex-home rejoins via delta bootstrap and converges too
+    g.mark_up("home")
+    info = g.rejoin("home")
+    assert info["online_rows"] > 0 and info["offline_rows"] > 0
+    g.tick(now=8 * HOUR)
+    g.drain()
+    assert_planes_identical(g, "home", spec, "rejoined ex-home")
