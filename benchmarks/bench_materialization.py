@@ -72,12 +72,14 @@ def _merge_spec() -> FeatureSetSpec:
 
 
 def _merge_frame(rng, n: int, t0: int) -> Table:
-    return Table({
-        "entity_id": rng.integers(0, 20_000, n).astype(np.int64),
-        "ts": (t0 + rng.integers(0, 10**6, n)).astype(np.int64),
-        "f0": rng.random(n).astype(np.float32),
-        "f1": rng.random(n).astype(np.float32),
-    })
+    return Table(
+        {
+            "entity_id": rng.integers(0, 20_000, n).astype(np.int64),
+            "ts": (t0 + rng.integers(0, 10**6, n)).astype(np.int64),
+            "f0": rng.random(n).astype(np.float32),
+            "f1": rng.random(n).astype(np.float32),
+        }
+    )
 
 
 class _SeedStores:
@@ -356,18 +358,20 @@ def run(hours=16, fail_ps=(0.0, 0.15, 0.3), merge_window=100_000) -> dict:
         wall_f = time.perf_counter() - t0
         rep = fsf.check_consistency("act", 1)
         iv = fsf.scheduler.materialized_intervals("act", 1)
-        fault_rows.append({
-            "failure_p": p,
-            "jobs": st,
-            "eventually_consistent": bool(rep.consistent),
-            "timeline_complete": iv == [(0, 8 * HOUR)],
-            "repair_rounds": repairs,
-            "alerts": len(fsf.scheduler.alerts),
-            "retry_overhead_x": round(
-                (st["succeeded"] + st["retried"]) / max(st["succeeded"], 1), 2
-            ),
-            "wall_s": round(wall_f, 3),
-        })
+        fault_rows.append(
+            {
+                "failure_p": p,
+                "jobs": st,
+                "eventually_consistent": bool(rep.consistent),
+                "timeline_complete": iv == [(0, 8 * HOUR)],
+                "repair_rounds": repairs,
+                "alerts": len(fsf.scheduler.alerts),
+                "retry_overhead_x": round(
+                    (st["succeeded"] + st["retried"]) / max(st["succeeded"], 1), 2
+                ),
+                "wall_s": round(wall_f, 3),
+            }
+        )
 
     # -- Fig.5 semantics at scale -----------------------------------------------------
     hist = fs.offline.read("act", 1)

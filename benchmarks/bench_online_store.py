@@ -47,21 +47,25 @@ def bench_merge_engines(rows: int = 50_000, batches: int = 5) -> dict:
         rng = np.random.default_rng(3)
         store = OnlineStore(merge_engine=engine)
         frames = [
-            Table({
-                "entity_id": rng.integers(0, 10_000, per_batch).astype(np.int64),
-                "ts": rng.integers(0, 10**6 * (i + 1), per_batch).astype(np.int64),
-                "f0": rng.random(per_batch).astype(np.float32),
-            })
+            Table(
+                {
+                    "entity_id": rng.integers(0, 10_000, per_batch).astype(np.int64),
+                    "ts": rng.integers(0, 10**6 * (i + 1), per_batch).astype(np.int64),
+                    "f0": rng.random(per_batch).astype(np.float32),
+                }
+            )
             for i in range(batches)
         ]
         # steady-state warmup: insert EVERY id once so capacity growth, jit
         # traces, and the device upload all land off the clock — the timed
         # merges then exercise the resident override/no-op hot path
-        warm = Table({
-            "entity_id": np.arange(10_000, dtype=np.int64),
-            "ts": np.zeros(10_000, np.int64),
-            "f0": np.zeros(10_000, np.float32),
-        })
+        warm = Table(
+            {
+                "entity_id": np.arange(10_000, dtype=np.int64),
+                "ts": np.zeros(10_000, np.int64),
+                "f0": np.zeros(10_000, np.float32),
+            }
+        )
         store.merge(spec, warm, 10**6)
         store.merge(spec, frames[0], 10**7)  # warm the per-batch jit shapes
         base = (store.inserts, store.overrides, store.noops)
@@ -146,16 +150,18 @@ def _resident_cycle(entities=20_000, batch=2_048, cycles=10) -> dict:
     store = OnlineStore(merge_engine="kernel")
 
     def frame(n, t0):
-        return Table({
-            "entity_id": rng.integers(0, entities, n).astype(np.int64),
-            "ts": (t0 + rng.integers(0, 10**6, n)).astype(np.int64),
-            "f0": rng.random(n).astype(np.float32),
-        })
+        return Table(
+            {
+                "entity_id": rng.integers(0, entities, n).astype(np.int64),
+                "ts": (t0 + rng.integers(0, 10**6, n)).astype(np.int64),
+                "f0": rng.random(n).astype(np.float32),
+            }
+        )
 
     store.merge(spec, frame(entities * 2, 0), 10**7)  # build + grow
     ids = [rng.integers(0, entities, 256).astype(np.int64)]
     store.merge(spec, frame(batch, 10**6), 10**7 + 1)  # warm merge shapes
-    store.lookup("m", 1, ids)                          # warm lookup shapes
+    store.lookup("m", 1, ids)  # warm lookup shapes
     store.reset_transfer_stats()
     t0 = time.perf_counter()
     for i in range(cycles):

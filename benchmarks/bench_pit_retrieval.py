@@ -72,10 +72,12 @@ def run(spine_sizes=(1_000, 10_000), hours=24, entities=500) -> dict:
     rows = []
     rng = np.random.default_rng(0)
     for n in spine_sizes:
-        spine = Table({
-            "entity_id": rng.integers(0, entities, n).astype(np.int64),
-            "ts": rng.integers(2 * HOUR, hours * HOUR, n).astype(np.int64),
-        })
+        spine = Table(
+            {
+                "entity_id": rng.integers(0, entities, n).astype(np.int64),
+                "ts": rng.integers(2 * HOUR, hours * HOUR, n).astype(np.int64),
+            }
+        )
         t0 = time.perf_counter()
         frame = fs.get_offline_features(spine, [("act", 1)], use_kernel=False)
         t_sys = time.perf_counter() - t0
@@ -88,20 +90,20 @@ def run(spine_sizes=(1_000, 10_000), hours=24, entities=500) -> dict:
             t0 = time.perf_counter()
             naive = _naive_pit(hist, spine, ["s2", "m6"])
             t_naive = time.perf_counter() - t0
-            got = np.stack(
-                [frame["act:v1:s2"], frame["act:v1:m6"]], axis=1
-            )
+            got = np.stack([frame["act:v1:s2"], frame["act:v1:m6"]], axis=1)
             found = frame["act:v1:__found__"].astype(bool)
             np.testing.assert_allclose(got[found], naive[found], rtol=1e-4, atol=1e-3)
 
-        rows.append({
-            "history_rows": len(hist),
-            "spine_rows": n,
-            "pit_s": round(t_sys, 4),
-            "pit_warm_s": round(t_sys_warm, 4),
-            "spine_rows_per_s_warm": int(n / max(t_sys_warm, 1e-9)),
-            "naive_python_s": round(t_naive, 4) if t_naive else None,
-        })
+        rows.append(
+            {
+                "history_rows": len(hist),
+                "spine_rows": n,
+                "pit_s": round(t_sys, 4),
+                "pit_warm_s": round(t_sys_warm, 4),
+                "spine_rows_per_s_warm": int(n / max(t_sys_warm, 1e-9)),
+                "naive_python_s": round(t_naive, 4) if t_naive else None,
+            }
+        )
     return {"table": rows}
 
 

@@ -103,22 +103,34 @@ def run(sizes=(2_000, 10_000, 50_000), n_aggs=6) -> dict:
         # UDF's O(N·W·A) reads.
         feat = 2  # distinct source columns
         n_windows = len({a.window for a in aggs})
-        kernel_flops = n_windows * (len(table) / 256) * (512 * 512 * feat * 2 + 256 * 513 * feat * 2)
+        kernel_flops = (
+            n_windows
+            * (len(table) / 256)
+            * (512 * 512 * feat * 2 + 256 * 513 * feat * 2)
+        )
         naive_reads = sum(
             float(np.sum(np.minimum(np.arange(len(table)) + 1, 200)))  # ~avg span
             for _ in aggs
         )
-        rows.append({
-            "rows": len(table),
-            "aggs": n_aggs,
-            "udf_naive_s": round(t_naive, 4),
-            "dsl_xla_s": round(t_xla, 4),
-            "dsl_xla_warm_s": round(t_xla_warm, 4),
-            "speedup_cold": round(t_naive / max(t_xla, 1e-9), 1),
-            "speedup_warm": round(t_naive / max(t_xla_warm, 1e-9), 1),
-            "kernel_flops_analytic": kernel_flops,
-        })
-    return {"table": rows, "notes": "dsl-kernel wall time is interpret-mode on CPU; analytic flops reported instead"}
+        rows.append(
+            {
+                "rows": len(table),
+                "aggs": n_aggs,
+                "udf_naive_s": round(t_naive, 4),
+                "dsl_xla_s": round(t_xla, 4),
+                "dsl_xla_warm_s": round(t_xla_warm, 4),
+                "speedup_cold": round(t_naive / max(t_xla, 1e-9), 1),
+                "speedup_warm": round(t_naive / max(t_xla_warm, 1e-9), 1),
+                "kernel_flops_analytic": kernel_flops,
+            }
+        )
+    return {
+        "table": rows,
+        "notes": (
+            "dsl-kernel wall time is interpret-mode on CPU; analytic flops "
+            "reported instead"
+        ),
+    }
 
 
 if __name__ == "__main__":

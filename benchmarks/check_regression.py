@@ -14,7 +14,14 @@ against the committed trajectory artifacts ``BENCH_online_store.json`` and
   throughput bench's online/offline shipped bytes must match the
   committed numbers EXACTLY (its workload is seeded and fixed-shape even
   under --fast; a mismatch means the wire format or reduction changed and
-  the baseline must be re-committed deliberately).
+  the baseline must be re-committed deliberately).  Since the wire
+  transport landed (core/wire.py) the gated geo numbers are TRUE wire
+  bytes: raw serialized payload AND post-zlib frame size per plane —
+  deliberately re-baselined in BENCH_geo_replication.json for the wire
+  format (the pre-wire numbers were array-size estimates).  The
+  compressed sizes assume the standard zlib deflate output CPython links
+  everywhere we run; a wire-byte mismatch with identical raw bytes means
+  the compression layer changed, not the workload.
 
 * MERGE / APPLY THROUGHPUT (tolerance + calibration): rows/s is machine-
   and load-dependent, so the committed baseline is first rescaled by how
@@ -102,13 +109,21 @@ def check_merge_throughput(
 def check_geo_replication(
     cur: dict, base: dict, tolerance: float, scale: float, failures: list[str]
 ) -> None:
-    """Offline+online plane gates for the geo replicator (ISSUE 4): shipped
-    bytes exactly (the throughput workload is seeded and fixed-shape, so
-    any drift is a wire-format/reduction change that must be re-committed
-    deliberately); replica-apply rows/s within the machine-calibrated
+    """Offline+online plane gates for the geo replicator (ISSUE 4, wire
+    bytes since ISSUE 5): raw AND compressed wire bytes exactly (the
+    throughput workload is seeded and fixed-shape, so any drift is a
+    wire-format/reduction/compression change that must be re-committed
+    deliberately); the recorded compression ratio must not regress below
+    break-even; replica-apply rows/s within the machine-calibrated
     tolerance, per plane."""
     c, b = cur["throughput"], base["throughput"]
-    for field in ("shipped_bytes", "offline_shipped_bytes"):
+    byte_fields = (
+        "shipped_bytes",
+        "shipped_raw_bytes",
+        "offline_shipped_bytes",
+        "offline_shipped_raw_bytes",
+    )
+    for field in byte_fields:
         got, want = c[field], b[field]
         if got != want:
             failures.append(
@@ -117,6 +132,17 @@ def check_geo_replication(
             )
         else:
             print(f"  ok: geo {field} {got} B (exact match)")
+    ratio = c["compression_ratio"]
+    if ratio < 1.0:
+        failures.append(
+            f"geo wire compression fell below break-even: ratio {ratio} "
+            f"(encoder should ship raw when zlib does not win)"
+        )
+    else:
+        print(
+            f"  ok: geo wire compression ratio {ratio} (committed "
+            f"{b['compression_ratio']})"
+        )
     for field in ("replica_apply_rows_per_s", "offline_apply_rows_per_s"):
         got = c[field]
         floor = int(b[field] * scale * (1.0 - tolerance))

@@ -15,9 +15,18 @@ V5E_HBM = 16 * 2**30
 
 #: one-line "what would move the dominant term" note per dominant kind
 LEVERS = {
-    "compute": "raise useful-FLOP fraction: selective remat policy, drop capacity padding, fuse small ops",
-    "memory": "cut bytes: chunked/flash attention (no S^2 scores in HBM), fused norms, bf16 masks",
-    "collective": "cut traffic: sequence-sharded residuals, overlap a2a with expert FFN, pod-local reductions",
+    "compute": (
+        "raise useful-FLOP fraction: selective remat policy, drop capacity "
+        "padding, fuse small ops"
+    ),
+    "memory": (
+        "cut bytes: chunked/flash attention (no S^2 scores in HBM), fused "
+        "norms, bf16 masks"
+    ),
+    "collective": (
+        "cut traffic: sequence-sharded residuals, overlap a2a with expert "
+        "FFN, pod-local reductions"
+    ),
 }
 
 
@@ -37,20 +46,24 @@ def rows(results: dict, mesh: str = "single") -> list[dict]:
             continue
         r = cell["roofline"]
         peak = cell["memory"]["peak_bytes_per_dev"]
-        out.append({
-            "arch": cell["arch"],
-            "shape": cell["shape"],
-            "kind": cell["kind"],
-            "compute_ms": round(r["compute_s"] * 1e3, 2),
-            "memory_ms": round(r["memory_s"] * 1e3, 2),
-            "collective_ms": round(r["collective_s"] * 1e3, 2),
-            "dominant": r["dominant"],
-            "useful_ratio": round(r["useful_ratio"], 3) if r.get("useful_ratio") else None,
-            "peak_GiB": round(peak / 2**30, 2),
-            "fits_v5e": peak <= V5E_HBM,
-            "microbatches": cell.get("microbatches", 1),
-            "lever": LEVERS[r["dominant"]],
-        })
+        out.append(
+            {
+                "arch": cell["arch"],
+                "shape": cell["shape"],
+                "kind": cell["kind"],
+                "compute_ms": round(r["compute_s"] * 1e3, 2),
+                "memory_ms": round(r["memory_s"] * 1e3, 2),
+                "collective_ms": round(r["collective_s"] * 1e3, 2),
+                "dominant": r["dominant"],
+                "useful_ratio": (
+                    round(r["useful_ratio"], 3) if r.get("useful_ratio") else None
+                ),
+                "peak_GiB": round(peak / 2**30, 2),
+                "fits_v5e": peak <= V5E_HBM,
+                "microbatches": cell.get("microbatches", 1),
+                "lever": LEVERS[r["dominant"]],
+            }
+        )
     return out
 
 
@@ -58,7 +71,11 @@ def summarize(path="results/dryrun.json") -> dict:
     results = load(path)
     single = rows(results, "single")
     multi = rows(results, "multi")
-    errors = {k: v["error"] for k, v in results.items() if isinstance(v, dict) and v.get("error")}
+    errors = {
+        k: v["error"]
+        for k, v in results.items()
+        if isinstance(v, dict) and v.get("error")
+    }
     skips = [k for k, v in results.items() if isinstance(v, dict) and v.get("skip")]
     return {
         "single_pod": single,
@@ -71,7 +88,10 @@ def summarize(path="results/dryrun.json") -> dict:
 
 def print_table(path="results/dryrun.json") -> None:
     s = summarize(path)
-    hdr = f"{'arch':22s} {'shape':12s} {'cmp_ms':>9s} {'mem_ms':>9s} {'col_ms':>9s} {'dom':>10s} {'useful':>7s} {'GiB/dev':>8s} fits µ"
+    hdr = (
+        f"{'arch':22s} {'shape':12s} {'cmp_ms':>9s} {'mem_ms':>9s} "
+        f"{'col_ms':>9s} {'dom':>10s} {'useful':>7s} {'GiB/dev':>8s} fits µ"
+    )
     print(hdr)
     print("-" * len(hdr))
     for r in s["single_pod"]:

@@ -148,6 +148,13 @@ def main(fast: bool = False):
     lag = g.lag("eastus")
     print(f"replica lag after materialization: {lag['planes']}")
     g.drain()
+    ship = g.replicator.shipped["eastus"]
+    print(
+        f"wire transport: {ship['batches']} batches coalesced into "
+        f"{ship['frames']} frames, {ship['raw_bytes']} raw B -> "
+        f"{ship['bytes']} wire B "
+        f"({ship['raw_bytes'] / max(ship['bytes'], 1):.2f}x compression)"
+    )
     ids = [np.arange(16, dtype=np.int64)]
     _, _, route = g.get_online_features("activity", 1, ids, consumer_region="eastus")
     print(f"read from eastus served by {route['region']} ({route['modeled_ms']} ms)")

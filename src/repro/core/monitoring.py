@@ -116,15 +116,46 @@ class HealthMonitor:
             )
 
     def record_replication_ship(
-        self, nbytes: int, rows: int, plane: Optional[str] = None
+        self,
+        rows: int,
+        *,
+        raw_nbytes: int,
+        wire_nbytes: int,
+        batches: int = 1,
+        plane: Optional[str] = None,
     ) -> None:
-        self.system.inc("replication/shipped_batches")
+        """One wire frame shipped to a replica.  Both byte counters are
+        MEASURED off the encoded frame (core/wire.py), not estimated from
+        array sizes: ``shipped_bytes`` is the post-compression wire size
+        that actually crosses the WAN, ``shipped_raw_bytes`` the serialized
+        payload before compression.  A coalesced frame carries several
+        batches, so ``batches`` rides along explicitly."""
+        self.system.inc("replication/shipped_frames")
+        self.system.inc("replication/shipped_batches", batches)
         self.system.inc("replication/shipped_rows", rows)
-        self.system.inc("replication/shipped_bytes", nbytes)
+        self.system.inc("replication/shipped_bytes", wire_nbytes)
+        self.system.inc("replication/shipped_raw_bytes", raw_nbytes)
         if plane is not None:
-            self.system.inc(f"replication/shipped_batches/{plane}")
+            self.system.inc(f"replication/shipped_frames/{plane}")
+            self.system.inc(f"replication/shipped_batches/{plane}", batches)
             self.system.inc(f"replication/shipped_rows/{plane}", rows)
-            self.system.inc(f"replication/shipped_bytes/{plane}", nbytes)
+            self.system.inc(f"replication/shipped_bytes/{plane}", wire_nbytes)
+            self.system.inc(f"replication/shipped_raw_bytes/{plane}", raw_nbytes)
+
+    def clear_replica_gauges(self, replica: str) -> None:
+        """Drop every per-replica replication gauge when the replica leaves
+        the serving set (drop, failover promotion, dead ex-home).  Gauges
+        are last-value-wins: without this, a departed region keeps
+        reporting its final lag/staleness forever, which reads as a live
+        replica that stopped draining."""
+        suffix = f"/{replica}"
+        gauges = self.system.gauges
+        for key in [
+            k
+            for k in gauges
+            if k.startswith("replication/") and k.endswith(suffix)
+        ]:
+            del gauges[key]
 
     def healthy(self) -> bool:
         failed = self.system.counters.get("jobs_failed", 0)

@@ -30,6 +30,25 @@ batches add ``columns`` (index + native-dtype feature arrays, the record-
 schema remainder) and leave ``values`` empty.  ``ReplicationLog.lag``
 reports a per-plane breakdown on top of the combined counts.
 
+Wire transport (core/wire.py)
+-----------------------------
+Replica-bound batches do NOT travel as in-process references: every batch a
+replica receives — drain, out-of-order ``apply_batch``, delta bootstrap,
+failover replay — is serialized into a contiguous wire frame (fixed header
++ length-prefixed dtype-tagged arrays, optional zlib), shipped over the
+modeled WAN, and DECODED on the replica side; the replica applies read-only
+views of the received buffer, so it can never alias or corrupt publisher
+memory.  The log itself stores frozen private copies on ``append`` for the
+same reason (an un-shipped batch must survive later in-place mutation of
+the publisher's buffers).  ``drain`` coalesces runs of adjacent same-plane
+same-table pending batches into one frame per run (one header, one shared
+compression stream), while acking each constituent batch by its own seq.
+Shipping accounting (``GeoReplicator.shipped``, the monitor's
+``replication/shipped_*`` counters) records MEASURED bytes — serialized
+raw payload and post-compression wire size — and ``topology.transfer_ms``
+prices the wire size, making the per-plane shipped-bytes benchmarks true
+transport measurements rather than array-size estimates.
+
 Log / cursor / replay protocol
 ------------------------------
 ``ReplicationLog`` is a bounded, totally-ordered sequence of reduced
@@ -104,12 +123,22 @@ from repro.core.online_store import OnlineStore
 from repro.core.regions import GeoTopology, RegionDownError, ReplicationPolicy
 
 __all__ = [
+    "DEFAULT_COMPRESS_LEVEL",
     "GeoFeatureStore",
     "GeoReplicator",
     "ReplicatedBatch",
     "ReplicationLog",
     "ReplicationLogFull",
 ]
+
+#: default zlib level for the wire codec (core/wire.py re-exports it); the
+#: constant lives here, not in wire.py, because wire.py imports this module
+#: (for ReplicatedBatch) and default-argument values need it at class-body
+#: execution time, before the bottom-of-module wire import has run.
+#: Level 1 is the throughput sweet spot on merge-batch payloads (random-ish
+#: float features + low-entropy keys/timestamps): ~97% of level 6's ratio
+#: at ~1/3 the encode cost; 0 disables compression entirely.
+DEFAULT_COMPRESS_LEVEL = 1
 
 
 class ReplicationLogFull(RuntimeError):
@@ -152,6 +181,15 @@ class ReplicatedBatch:
         return n
 
 
+def _frozen_copy(a: np.ndarray, dtype=None) -> np.ndarray:
+    """Private read-only copy of a caller array: the log must not alias
+    live publisher buffers (copy) and nothing downstream may mutate a
+    logged batch in place (writeable=False)."""
+    out = np.array(a, dtype=dtype, copy=True)
+    out.flags.writeable = False
+    return out
+
+
 class ReplicationLog:
     """Bounded sequence of reduced batches + one cursor per replica.
 
@@ -174,7 +212,22 @@ class ReplicationLog:
     def register_replica(self, name: str, from_seq: Optional[int] = None) -> int:
         """Start tracking a replica.  By default its cursor starts at the
         current head — the caller is responsible for snapshot-bootstrapping
-        state appended before registration."""
+        state appended before registration.  An explicit ``from_seq`` must
+        lie between the oldest RETAINED sequence number and the head: a
+        cursor past ``next_seq`` (or negative) drives ``pending_count``
+        negative and silently passes the in-sync read gate while the
+        replica is arbitrarily stale, and a cursor below the truncated
+        floor pins pending batches that no longer exist — nothing is
+        drainable, so the replica could never catch up (it missed the
+        truncated data; it needs a snapshot bootstrap, not a cursor)."""
+        if from_seq is not None:
+            floor = self._batches[0].seq if self._batches else self.next_seq
+            if not (floor <= from_seq <= self.next_seq):
+                raise ValueError(
+                    f"from_seq {from_seq} outside [{floor}, {self.next_seq}] "
+                    f"(cursor may not start past the log head or below the "
+                    f"truncated floor)"
+                )
         cursor = self.next_seq if from_seq is None else from_seq
         self.cursors[name] = cursor
         self._acked_ahead[name] = set()
@@ -207,7 +260,14 @@ class ReplicationLog:
         the log is still at capacity.  ``force=True`` appends past capacity
         instead of raising — for a publisher whose store ALREADY applied
         the batch, losing it is worse than growing the log (see
-        GeoReplicator._publish)."""
+        GeoReplicator._publish).
+
+        The logged arrays are private COPIES, frozen read-only: the caller
+        hands in live views of its own buffers (an online merge's
+        ``touched_values``, an offline merge's ``inserted_columns`` slices
+        of the frame), and an un-shipped batch may sit in the log across
+        later in-place mutation or compaction of those buffers.  Aliasing
+        them would silently corrupt whatever eventually ships."""
         if plane not in ("online", "offline"):
             raise ValueError(f"unknown plane {plane!r}")
         if len(self._batches) >= self.capacity:
@@ -220,11 +280,15 @@ class ReplicationLog:
             seq=self.next_seq,
             table=table,
             creation_ts=int(creation_ts),
-            keys=np.asarray(keys, np.int64),
-            event_ts=np.asarray(event_ts, np.int64),
-            values=np.asarray(values, np.float32),
+            keys=_frozen_copy(keys, np.int64),
+            event_ts=_frozen_copy(event_ts, np.int64),
+            values=_frozen_copy(values, np.float32),
             plane=plane,
-            columns=columns,
+            columns=(
+                None
+                if columns is None
+                else {k: _frozen_copy(v) for k, v in columns.items()}
+            ),
         )
         self.next_seq += 1
         self._batches.append(batch)
@@ -286,7 +350,15 @@ class ReplicationLog:
 class GeoReplicator:
     """Async applier: drains the home stores' replication log into replica
     stores (both planes) over the modeled WAN, tracks lag, and replays on
-    fail-over."""
+    fail-over.
+
+    Every replica-bound batch — drain, out-of-order ``apply_batch``, delta
+    bootstrap, failover replay — crosses the WAN hop as a serialized wire
+    frame (core/wire.py): encode on the home side, decode on the replica
+    side, apply only the decoded copy.  Adjacent same-plane same-table
+    pending batches coalesce into one frame per ``drain``; shipping
+    accounting records MEASURED raw and post-compression wire bytes, and
+    the topology's bandwidth model prices the compressed size."""
 
     def __init__(
         self,
@@ -298,12 +370,14 @@ class GeoReplicator:
         log: Optional[ReplicationLog] = None,
         clock: Optional[Callable[[], int]] = None,
         monitor=None,
+        compress_level: Optional[int] = DEFAULT_COMPRESS_LEVEL,
     ) -> None:
         self.topology = topology
         self.home_region = home_region
         self.log = log if log is not None else ReplicationLog()
         self.clock = clock or (lambda: 0)
         self.monitor = monitor
+        self.compress_level = compress_level
         self.stores: dict[str, OnlineStore] = {home_region: home_store}
         # offline plane is optional: a standalone online-only replicator
         # (benchmarks, tests) never publishes offline batches
@@ -418,13 +492,19 @@ class GeoReplicator:
         if offline_store is not None:
             self.offline_stores[region] = offline_store
         cut = self.log.register_replica(region)
+        # "bytes" is the TRUE wire size (post-compression frame bytes, the
+        # size the WAN bandwidth model prices); "raw_bytes" the serialized
+        # payload before compression; "frames" counts wire messages (a
+        # coalesced frame carries several batches)
         self.shipped[region] = {
+            "frames": 0,
             "batches": 0,
             "rows": 0,
             "bytes": 0,
+            "raw_bytes": 0,
             "ms": 0.0,
             "by_plane": {
-                p: {"batches": 0, "rows": 0, "bytes": 0}
+                p: {"frames": 0, "batches": 0, "rows": 0, "bytes": 0, "raw_bytes": 0}
                 for p in ("online", "offline")
             },
         }
@@ -441,7 +521,12 @@ class GeoReplicator:
         flight, batches appended during the stream overlap it harmlessly
         (per-plane idempotence), and an interrupted stream is simply
         retried — ``apply_chunks``/``merge_reduced`` make re-application a
-        no-op.  Returns per-plane bootstrapped row counts."""
+        no-op.  Every chunk crosses the WAN as a wire frame (seq = the
+        out-of-log ``BOOTSTRAP_SEQ`` sentinel, never acked); offline chunks
+        span many merges, so their per-row creation_ts rides along as a
+        wire column the apply side peels off.  Returns per-plane
+        bootstrapped row counts."""
+        self._specs[spec.key] = spec
         out = {"online_rows": 0, "offline_rows": 0, "chunks": 0}
         home_online = self.stores[self.home_region]
         store = self.stores.get(region)
@@ -461,8 +546,19 @@ class GeoReplicator:
                     idx = np.flatnonzero(creation_ts == cr)
                     for lo in range(0, len(idx), chunk_rows):
                         sl = idx[lo : lo + chunk_rows]
-                        store.merge_reduced(
-                            spec, keys[sl], event_ts[sl], values[sl], int(cr)
+                        batch = ReplicatedBatch(
+                            seq=wire.BOOTSTRAP_SEQ,
+                            table=spec.key,
+                            creation_ts=int(cr),
+                            keys=keys[sl],
+                            event_ts=event_ts[sl],
+                            values=values[sl],
+                        )
+                        self._ship_frame(
+                            region,
+                            wire.encode_batch(
+                                batch, compress_level=self.compress_level
+                            ),
                         )
                         out["online_rows"] += len(sl)
                         out["chunks"] += 1
@@ -480,63 +576,118 @@ class GeoReplicator:
             ):
                 if len(chunk) == 0:
                     continue
+                # CREATION_TS stays IN the columns payload: bootstrap chunks
+                # span merges, so creation_ts is per-row, not the batch
+                # scalar — _ship_frame pops it back out on the replica side
                 cols = {
-                    k: chunk[k]
-                    for k in chunk.names
-                    if k not in ("__key__", EVENT_TS, CREATION_TS)
+                    k: chunk[k] for k in chunk.names if k not in ("__key__", EVENT_TS)
                 }
-                offline.apply_chunks(
-                    spec, chunk["__key__"], chunk[EVENT_TS], chunk[CREATION_TS], cols
+                batch = ReplicatedBatch(
+                    seq=wire.BOOTSTRAP_SEQ,
+                    table=spec.key,
+                    creation_ts=int(chunk[CREATION_TS][0]),
+                    keys=chunk["__key__"],
+                    event_ts=chunk[EVENT_TS],
+                    values=np.empty((len(chunk), 0), np.float32),
+                    plane="offline",
+                    columns=cols,
+                )
+                self._ship_frame(
+                    region,
+                    wire.encode_batch(batch, compress_level=self.compress_level),
                 )
                 out["offline_rows"] += len(chunk)
                 out["chunks"] += 1
         return out
 
     # -- apply (replica side) -------------------------------------------------
-    def apply_batch(self, region: str, batch: ReplicatedBatch) -> dict:
-        """Ship + apply ONE batch (either plane) to a replica and
-        acknowledge it.  Exposed so tests can drive out-of-order delivery;
-        ``drain`` is the in-order fast path."""
-        spec = self._specs[batch.table]
-        if batch.plane == "offline":
-            stats = self.offline_stores[region].apply_chunks(
-                spec, batch.keys, batch.event_ts, batch.creation_ts, batch.columns
-            )
-        else:
-            stats = self.stores[region].merge_reduced(
-                spec, batch.keys, batch.event_ts, batch.values, batch.creation_ts
-            )
-        self.log.ack(region, batch.seq)
+    def _ship_frame(self, region: str, frame) -> list[dict]:
+        """The WAN hop: hand a replica one encoded ``wire.WireFrame``, which
+        it decodes and applies batch by batch (acking each logged seq).  The
+        replica only ever touches the DECODED copies — read-only views of
+        the received buffer, never the home store's live arrays — and the
+        shipping ledger records the frame's measured raw + wire bytes, with
+        ``topology.transfer_ms`` pricing the compressed size."""
+        stats = []
+        for batch in wire.decode_frame(frame.data):
+            spec = self._specs[batch.table]
+            if batch.plane == "offline":
+                cols = dict(batch.columns or {})
+                creation = cols.pop(CREATION_TS, batch.creation_ts)
+                st = self.offline_stores[region].apply_chunks(
+                    spec, batch.keys, batch.event_ts, creation, cols
+                )
+            else:
+                st = self.stores[region].merge_reduced(
+                    spec, batch.keys, batch.event_ts, batch.values, batch.creation_ts
+                )
+            if batch.seq != wire.BOOTSTRAP_SEQ:
+                self.log.ack(region, batch.seq)
+            stats.append(st)
         ship = self.shipped[region]
-        ship["batches"] += 1
-        ship["rows"] += batch.rows
-        ship["bytes"] += batch.nbytes
-        ship["ms"] += self.topology.transfer_ms(self.home_region, region, batch.nbytes)
-        plane = ship["by_plane"][batch.plane]
-        plane["batches"] += 1
-        plane["rows"] += batch.rows
-        plane["bytes"] += batch.nbytes
+        ship["frames"] += 1
+        ship["batches"] += len(stats)
+        ship["rows"] += frame.rows
+        ship["bytes"] += frame.wire_nbytes
+        ship["raw_bytes"] += frame.raw_nbytes
+        ship["ms"] += self.topology.transfer_ms(
+            self.home_region, region, frame.wire_nbytes
+        )
+        plane = ship["by_plane"][frame.plane]
+        plane["frames"] += 1
+        plane["batches"] += len(stats)
+        plane["rows"] += frame.rows
+        plane["bytes"] += frame.wire_nbytes
+        plane["raw_bytes"] += frame.raw_nbytes
         if self.monitor is not None:
             self.monitor.record_replication_ship(
-                batch.nbytes, batch.rows, plane=batch.plane
+                frame.rows,
+                batches=len(stats),
+                raw_nbytes=frame.raw_nbytes,
+                wire_nbytes=frame.wire_nbytes,
+                plane=frame.plane,
             )
         return stats
+
+    def apply_batch(self, region: str, batch: ReplicatedBatch) -> dict:
+        """Ship + apply ONE batch (either plane) to a replica and
+        acknowledge it — a single-batch wire frame, no coalescing.  Exposed
+        so tests can drive out-of-order delivery; ``drain`` is the in-order
+        coalescing fast path."""
+        frame = wire.encode_batch(batch, compress_level=self.compress_level)
+        return self._ship_frame(region, frame)[0]
 
     def drain(
         self, region: Optional[str] = None, max_batches: Optional[int] = None
     ) -> dict:
         """Apply pending batches in sequence order — all replicas or one.
+        Adjacent same-plane same-table batches coalesce into one wire frame
+        (shared header + compression stream); each constituent batch is
+        still acked by its own seq.  Replicas whose cursors align get the
+        SAME frame — logged batches are immutable, so a run's encoding is
+        a pure function of (plane, table, seq range) and is encoded (and
+        zlib-compressed) once per drain pass, not once per replica.
         Returns {region: {"applied_batches", "applied_rows"}}."""
         regions = [region] if region is not None else self.replica_regions()
         out: dict[str, dict] = {}
+        encoded: dict[tuple, object] = {}
         for r in regions:
             pend = self.log.pending(r)
             if max_batches is not None:
                 pend = pend[:max_batches]
             rows = 0
-            for batch in pend:
-                self.apply_batch(r, batch)
-                rows += batch.rows
+            for run in wire.coalesce(pend):
+                # exact seq tuple, not a (first, last) range: out-of-order
+                # acks can punch holes in one replica's pending run, and a
+                # range key would collide it with another replica's gapless
+                # run over the same span
+                key = (run[0].plane, run[0].table, tuple(b.seq for b in run))
+                frame = encoded.get(key)
+                if frame is None:
+                    frame = wire.encode_run(run, compress_level=self.compress_level)
+                    encoded[key] = frame
+                self._ship_frame(r, frame)
+                rows += frame.rows
             out[r] = {"applied_batches": len(pend), "applied_rows": rows}
             self._record_lag(r)
         self.log.truncate()
@@ -590,6 +741,7 @@ class GeoReplicator:
         if region not in self.stores:
             raise RegionDownError(f"no replica store in {region}")
         replay = self.drain(region)[region]
+        old_home_region = self.home_region
         old_home = self.stores[self.home_region]
         try:
             old_home.merge_listeners.remove(self._on_home_merge)
@@ -605,6 +757,13 @@ class GeoReplicator:
         self.log.drop_replica(region)
         self.shipped.pop(region, None)
         self.home_region = region
+        if self.monitor is not None:
+            # neither region is a replica any more: the promoted one is the
+            # new home (in sync by definition), the dead ex-home left the
+            # serving set — without this, a departed replica's last lag/
+            # staleness gauges would report forever
+            self.monitor.clear_replica_gauges(region)
+            self.monitor.clear_replica_gauges(old_home_region)
         self.stores[region].merge_listeners.append(self._on_home_merge)
         new_offline = self.offline_stores.get(region)
         if new_offline is not None:
@@ -642,6 +801,7 @@ class GeoFeatureStore:
         max_lag_batches: int = 0,
         log_capacity: int = 1024,
         auto_drain: bool = False,
+        compress_level: Optional[int] = DEFAULT_COMPRESS_LEVEL,
         **fs_kwargs,
     ) -> None:
         self.fs = FeatureStore(
@@ -664,6 +824,7 @@ class GeoFeatureStore:
             log=self.log,
             clock=self.fs.clock,
             monitor=self.fs.monitor,
+            compress_level=compress_level,
         )
         self.fs.attach_replication(self.replicator)
         self.last_bootstrap: Optional[dict] = None
@@ -829,3 +990,10 @@ class GeoFeatureStore:
             self.fs.offline = promoted_offline
             self.fs.materializer.offline = promoted_offline
         return {"promoted": new_home, **replay}
+
+
+# Imported at the BOTTOM: wire.py needs ReplicatedBatch (and the compression
+# default) from this module, so importing it any earlier would be circular.
+# By the time any GeoReplicator method dereferences `wire`, both modules are
+# fully initialized regardless of which one a caller imported first.
+from repro.core import wire  # noqa: E402

@@ -1,0 +1,343 @@
+"""Wire format for replica-bound ``ReplicatedBatch``es (ROADMAP: WAN
+transport realism).
+
+Until now the replication log handed replicas live in-process numpy
+references: shipped-byte numbers were estimates (``ReplicatedBatch.nbytes``)
+and a replica could in principle alias the publisher's buffers.  This module
+is the actual transport encoding — every batch a replica receives has been
+serialized into one contiguous byte buffer and decoded back out, exactly
+what a multi-process deployment would put on the WAN — so shipped bytes are
+MEASURED (``len(frame.data)``), compression is real (zlib, level
+configurable, ratio recorded), and replicas physically cannot share memory
+with the home store (decoded arrays are read-only views of the received
+buffer).
+
+Frame layout (little-endian throughout)
+---------------------------------------
+One FRAME carries one or more batches (a coalesced run shares a single
+header and a single compression stream)::
+
+    magic "FW" | u8 version | u8 flags (bit0: zlib) | u32 batch_count
+    | u64 raw_payload_len | payload
+
+``payload`` is the concatenation of batch records, zlib-compressed when
+flags bit0 is set.  Each batch record::
+
+    i64 seq | i64 creation_ts | u8 plane (0=online, 1=offline)
+    | u8 has_columns | u16 table_name_len | table_name utf8
+    | u32 table_version
+    | array keys | array event_ts | array values
+    | if has_columns: u32 n_cols, then per column:
+        u16 name_len | name utf8 | array
+
+and an ARRAY is dtype-tagged and shape-prefixed::
+
+    u16 dtype_len | numpy dtype.str utf8 | u8 ndim | u32 dims[ndim]
+    | raw C-order bytes
+
+The dtype tag carries the full numpy dtype string (``"<i8"``, ``"<f4"``,
+...), so offline batches ship their record-schema columns in NATIVE dtypes
+and decode bit-exact.  ``seq == -1`` marks an out-of-log frame (delta-
+bootstrap chunks, which are not replication-log entries and are never
+acked).
+
+Coalescing
+----------
+``coalesce`` groups a replica's pending batches into maximal runs of
+adjacent same-plane same-table batches; ``encode_run`` packs one run into
+one frame (one header, one zlib stream over the concatenated records — the
+cross-batch redundancy is what the shared stream exploits).  Decoding a
+coalesced frame yields the constituent batches in sequence order, each with
+its own ``seq``, so the replica acks exactly the same per-batch sequence it
+would have acked un-coalesced.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import struct
+import zlib
+from typing import Iterable, Optional, Sequence
+
+import numpy as np
+
+# DEFAULT_COMPRESS_LEVEL lives in replication.py (the first module of the
+# replication<->wire pair to finish importing) and is re-exported here as
+# the codec's canonical knob: zlib levels 1..9 trade cpu for ratio, 0/None
+# ships raw.
+from repro.core.replication import DEFAULT_COMPRESS_LEVEL, ReplicatedBatch
+
+__all__ = [
+    "DEFAULT_COMPRESS_LEVEL",
+    "HEADER_SIZE",
+    "WireFrame",
+    "WireFormatError",
+    "coalesce",
+    "decode_batch",
+    "decode_frame",
+    "encode_batch",
+    "encode_run",
+]
+
+MAGIC = b"FW"
+VERSION = 1
+FLAG_ZLIB = 0x01
+#: out-of-log sentinel: bootstrap chunks ship over the wire but are not
+#: replication-log entries and must never be acked
+BOOTSTRAP_SEQ = -1
+
+_HEADER = struct.Struct("<2sBBIQ")
+#: fixed per-frame envelope cost — what break-even accounting must add to
+#: the raw payload when comparing against wire bytes
+HEADER_SIZE = _HEADER.size
+_BATCH_HEAD = struct.Struct("<qqBBH")
+_U16 = struct.Struct("<H")
+_U32 = struct.Struct("<I")
+_PLANE_CODE = {"online": 0, "offline": 1}
+_PLANE_NAME = {v: k for k, v in _PLANE_CODE.items()}
+
+
+class WireFormatError(ValueError):
+    """Malformed or foreign bytes handed to the decoder."""
+
+
+@dataclasses.dataclass(frozen=True)
+class WireFrame:
+    """One encoded wire message plus its shipping ledger.
+
+    ``data`` is the only thing that crosses the (modeled) WAN;
+    ``raw_nbytes``/``wire_nbytes`` are the measured sizes the shipping
+    accounting and the bandwidth cost model consume."""
+
+    data: bytes
+    raw_nbytes: int  # serialized payload before compression
+    seqs: tuple[int, ...]
+    rows: int
+    plane: str
+    table: tuple[str, int]
+
+    @property
+    def wire_nbytes(self) -> int:
+        return len(self.data)
+
+    @property
+    def compression_ratio(self) -> float:
+        """raw/wire for the payload+header actually shipped (>= 1.0 when
+        compression wins; ~1.0 when disabled or incompressible)."""
+        return (self.raw_nbytes + _HEADER.size) / max(self.wire_nbytes, 1)
+
+
+# -- encode -------------------------------------------------------------------
+
+
+def _encode_array(out: list[bytes], a: np.ndarray) -> None:
+    a = np.ascontiguousarray(a)
+    tag = a.dtype.str.encode()
+    out.append(_U16.pack(len(tag)))
+    out.append(tag)
+    out.append(struct.pack("<B", a.ndim))
+    out.append(struct.pack(f"<{a.ndim}I", *a.shape))
+    out.append(a.tobytes())
+
+
+def _encode_record(batch: ReplicatedBatch) -> bytes:
+    name = batch.table[0].encode()
+    out: list[bytes] = [
+        _BATCH_HEAD.pack(
+            batch.seq,
+            batch.creation_ts,
+            _PLANE_CODE[batch.plane],
+            1 if batch.columns is not None else 0,
+            len(name),
+        ),
+        name,
+        _U32.pack(batch.table[1]),
+    ]
+    _encode_array(out, batch.keys)
+    _encode_array(out, batch.event_ts)
+    _encode_array(out, batch.values)
+    if batch.columns is not None:
+        out.append(_U32.pack(len(batch.columns)))
+        for cname, col in batch.columns.items():
+            cb = cname.encode()
+            out.append(_U16.pack(len(cb)))
+            out.append(cb)
+            _encode_array(out, col)
+    return b"".join(out)
+
+
+def encode_run(
+    batches: Sequence[ReplicatedBatch],
+    *,
+    compress_level: Optional[int] = DEFAULT_COMPRESS_LEVEL,
+) -> WireFrame:
+    """Serialize a run of same-plane same-table batches into ONE frame.
+
+    The run shares a single header and a single compression stream; pass a
+    single batch for the un-coalesced path.  ``compress_level`` 0/None
+    ships the payload raw (the flag bit tells the decoder which)."""
+    if not batches:
+        raise ValueError("cannot encode an empty run")
+    plane, table = batches[0].plane, batches[0].table
+    for b in batches[1:]:
+        if b.plane != plane or b.table != table:
+            raise ValueError(
+                f"coalesced run must share (plane, table): "
+                f"{(plane, table)} vs {(b.plane, b.table)}"
+            )
+    payload = b"".join(_encode_record(b) for b in batches)
+    raw_len = len(payload)
+    flags = 0
+    if compress_level:
+        packed = zlib.compress(payload, compress_level)
+        # incompressible payloads ship raw rather than paying the zlib
+        # envelope for nothing; the flag bit keeps decode unambiguous
+        if len(packed) < raw_len:
+            payload, flags = packed, FLAG_ZLIB
+    head = _HEADER.pack(MAGIC, VERSION, flags, len(batches), raw_len)
+    return WireFrame(
+        data=head + payload,
+        raw_nbytes=raw_len,
+        seqs=tuple(b.seq for b in batches),
+        rows=sum(b.rows for b in batches),
+        plane=plane,
+        table=table,
+    )
+
+
+def encode_batch(
+    batch: ReplicatedBatch,
+    *,
+    compress_level: Optional[int] = DEFAULT_COMPRESS_LEVEL,
+) -> WireFrame:
+    """Serialize one batch (either plane) into one contiguous buffer."""
+    return encode_run([batch], compress_level=compress_level)
+
+
+# -- decode -------------------------------------------------------------------
+
+
+class _Reader:
+    def __init__(self, data: bytes) -> None:
+        self.view = memoryview(data)
+        self.pos = 0
+
+    def take(self, n: int) -> memoryview:
+        if self.pos + n > len(self.view):
+            raise WireFormatError(
+                f"truncated frame: need {n} bytes at offset {self.pos}, "
+                f"have {len(self.view) - self.pos}"
+            )
+        out = self.view[self.pos : self.pos + n]
+        self.pos += n
+        return out
+
+    def unpack(self, s: struct.Struct) -> tuple:
+        return s.unpack(self.take(s.size))
+
+
+def _decode_array(r: _Reader) -> np.ndarray:
+    (tag_len,) = r.unpack(_U16)
+    dtype = np.dtype(bytes(r.take(tag_len)).decode())
+    (ndim,) = struct.unpack("<B", r.take(1))
+    shape = struct.unpack(f"<{ndim}I", r.take(4 * ndim))
+    count = int(np.prod(shape)) if ndim else 1
+    a = np.frombuffer(r.take(count * dtype.itemsize), dtype, count)
+    return a.reshape(shape)
+
+
+def _decode_record(r: _Reader) -> ReplicatedBatch:
+    seq, creation_ts, plane_code, has_cols, name_len = r.unpack(_BATCH_HEAD)
+    if plane_code not in _PLANE_NAME:
+        raise WireFormatError(f"unknown plane code {plane_code}")
+    name = bytes(r.take(name_len)).decode()
+    (version,) = r.unpack(_U32)
+    keys = _decode_array(r)
+    event_ts = _decode_array(r)
+    values = _decode_array(r)
+    columns: Optional[dict[str, np.ndarray]] = None
+    if has_cols:
+        (n_cols,) = r.unpack(_U32)
+        columns = {}
+        for _ in range(n_cols):
+            (cn_len,) = r.unpack(_U16)
+            cname = bytes(r.take(cn_len)).decode()
+            columns[cname] = _decode_array(r)
+    return ReplicatedBatch(
+        seq=seq,
+        table=(name, version),
+        creation_ts=creation_ts,
+        keys=keys,
+        event_ts=event_ts,
+        values=values,
+        plane=_PLANE_NAME[plane_code],
+        columns=columns,
+    )
+
+
+def decode_frame(data: bytes) -> list[ReplicatedBatch]:
+    """Decode one frame back into its batches, in encoded order.
+
+    Decoded arrays are READ-ONLY zero-copy views of the (decompressed)
+    received buffer — the replica-side guarantee that applied state can
+    never alias, or be corrupted through, publisher memory."""
+    if len(data) < _HEADER.size:
+        raise WireFormatError(f"frame shorter than header: {len(data)} bytes")
+    magic, version, flags, batch_count, raw_len = _HEADER.unpack(data[: _HEADER.size])
+    if magic != MAGIC:
+        raise WireFormatError(f"bad magic {magic!r}")
+    if version != VERSION:
+        raise WireFormatError(f"unsupported wire version {version}")
+    payload = data[_HEADER.size :]
+    if flags & FLAG_ZLIB:
+        dec = zlib.decompressobj()
+        try:
+            payload = dec.decompress(payload)
+        except zlib.error as e:
+            raise WireFormatError(f"bad zlib payload: {e}") from None
+        if dec.unused_data or dec.unconsumed_tail:
+            raise WireFormatError("trailing bytes after compressed payload")
+    if len(payload) != raw_len:
+        raise WireFormatError(f"payload length {len(payload)} != declared {raw_len}")
+    r = _Reader(payload)
+    try:
+        batches = [_decode_record(r) for _ in range(batch_count)]
+    except WireFormatError:
+        raise
+    except (TypeError, ValueError, UnicodeDecodeError, struct.error) as e:
+        # a corrupted dtype tag, non-UTF8 name, or impossible shape must
+        # surface as the module's contractual rejection error, not leak the
+        # numpy/codec internals to the receiver
+        raise WireFormatError(f"malformed frame payload: {e}") from None
+    if r.pos != len(payload):
+        raise WireFormatError(f"{len(payload) - r.pos} trailing bytes in frame")
+    return batches
+
+
+def decode_batch(data: bytes) -> ReplicatedBatch:
+    """Decode a single-batch frame (the un-coalesced fast path)."""
+    batches = decode_frame(data)
+    if len(batches) != 1:
+        raise WireFormatError(f"expected 1 batch in frame, got {len(batches)}")
+    return batches[0]
+
+
+# -- coalescing ---------------------------------------------------------------
+
+
+def coalesce(
+    batches: Iterable[ReplicatedBatch],
+) -> list[list[ReplicatedBatch]]:
+    """Group pending batches into maximal runs of ADJACENT same-plane
+    same-table batches — the unit ``encode_run`` ships as one frame.
+
+    Adjacency (not global grouping) preserves the log's total order on the
+    wire: batches arrive and are acked in exactly the sequence the home
+    appended them, coalesced or not."""
+    runs: list[list[ReplicatedBatch]] = []
+    for b in batches:
+        if runs and runs[-1][0].plane == b.plane and runs[-1][0].table == b.table:
+            runs[-1].append(b)
+        else:
+            runs.append([b])
+    return runs

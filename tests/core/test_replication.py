@@ -263,6 +263,136 @@ def test_log_truncation_never_drops_unacked():
     assert [b.seq for b in log.pending("fast")] == [4]
 
 
+def test_log_append_copies_and_freezes_publisher_buffers():
+    """Regression (ISSUE 5 satellite): ``append`` used to wrap the caller's
+    live arrays with no copy, so a publisher mutating its buffers after
+    publish (in-place slot update, offline chunk compaction) corrupted any
+    un-shipped batch.  The log must hold frozen private copies."""
+    log = ReplicationLog()
+    log.register_replica("r")
+    keys = np.arange(4, dtype=np.int64)
+    event_ts = np.arange(4, dtype=np.int64)
+    values = np.ones((4, 2), np.float32)
+    cols = {"entity_id": np.arange(4, dtype=np.int64)}
+    online = log.append(("fs", 1), 1_000, keys, event_ts, values)
+    offline = log.append(
+        ("fs", 1),
+        1_001,
+        keys,
+        event_ts,
+        np.empty((4, 0), np.float32),
+        plane="offline",
+        columns=cols,
+    )
+    # publisher scribbles over every buffer it handed in
+    keys[:] = -7
+    event_ts[:] = -7
+    values[:] = np.nan
+    cols["entity_id"][:] = -7
+    np.testing.assert_array_equal(online.keys, np.arange(4))
+    np.testing.assert_array_equal(online.event_ts, np.arange(4))
+    np.testing.assert_array_equal(online.values, np.ones((4, 2), np.float32))
+    np.testing.assert_array_equal(offline.columns["entity_id"], np.arange(4))
+    # and nothing downstream can mutate a logged batch in place either
+    for a in (online.keys, online.values, offline.columns["entity_id"]):
+        assert not a.flags.writeable
+        with pytest.raises((ValueError, RuntimeError)):
+            a[0] = 1
+
+
+def test_mutate_after_publish_does_not_corrupt_replica():
+    """End-to-end form of the same regression: corrupt the merge stats
+    arrays AFTER the listener published them, then drain — the replica must
+    still converge to the home store's true state on both planes."""
+    spec = make_spec()
+    rng = np.random.default_rng(9)
+    home = OnlineStore(num_partitions=4)
+    home_off = OfflineStore(num_shards=4)
+    published = []
+    from repro.core.replication import GeoReplicator
+
+    topo2 = GeoTopology(regions={"h": Region("h"), "r": Region("r")})
+    repl = GeoReplicator(home, topology=topo2, home_region="h", home_offline=home_off)
+    home.merge_listeners.append(lambda s, st: published.append(st))
+    home_off.merge_listeners.append(lambda s, st: published.append(st))
+    replica, replica_off = OnlineStore(num_partitions=4), OfflineStore(num_shards=4)
+    repl.add_replica("r", replica, replica_off)
+    for i in range(3):
+        frame = make_frame(rng, 50, 20, 40 * (i + 1))
+        home.merge(spec, frame, 3_000 + i)
+        home_off.merge(spec, frame, 4_000 + i)
+    for st in published:  # the publisher's buffers go bad after the fact
+        for key in ("touched_values", "touched_keys", "inserted_keys"):
+            if key in st:
+                st[key][:] = -1
+        for col in st.get("inserted_columns", {}).values():
+            col[:] = -1
+    repl.drain()
+    assert_dumps_identical(home, replica, spec, "mutate-after-publish")
+    assert_offline_identical(home_off, replica_off, spec, "mutate-after-publish")
+
+
+def test_drain_encodes_shared_runs_once_for_aligned_replicas(monkeypatch):
+    """Replicas whose cursors align receive the SAME encoded frame: the
+    zlib pass over a pending run happens once per drain, not once per
+    replica (logged batches are immutable, so the encoding is pure)."""
+    from repro.core import wire
+    from repro.core.replication import GeoReplicator
+
+    spec = make_spec()
+    topo2 = GeoTopology(
+        regions={"h": Region("h"), "r1": Region("r1"), "r2": Region("r2")}
+    )
+    home = OnlineStore(num_partitions=4)
+    repl = GeoReplicator(home, topology=topo2, home_region="h")
+    a, b = OnlineStore(num_partitions=4), OnlineStore(num_partitions=4)
+    repl.add_replica("r1", a)
+    repl.add_replica("r2", b)
+    rng = np.random.default_rng(17)
+    for i in range(3):
+        home.merge(spec, make_frame(rng, 40, 20, 30 * (i + 1)), 6_000 + i)
+    calls = []
+    real = wire.encode_run
+    monkeypatch.setattr(
+        wire, "encode_run", lambda *a_, **kw: (calls.append(1), real(*a_, **kw))[1]
+    )
+    repl.drain()
+    assert len(calls) == 1  # one coalesced run, two replicas, one encode
+    assert_dumps_identical(home, a, spec, "r1")
+    assert_dumps_identical(home, b, spec, "r2")
+    assert repl.shipped["r1"]["bytes"] == repl.shipped["r2"]["bytes"]
+
+
+def test_register_replica_rejects_out_of_range_cursor():
+    """Regression (ISSUE 5 satellite): a cursor past the head (or negative)
+    made ``pending_count`` negative, which silently passed the in-sync read
+    gate for an arbitrarily stale replica."""
+    log = ReplicationLog()
+    for i in range(3):
+        _log_batch(log, i)
+    with pytest.raises(ValueError, match="from_seq"):
+        log.register_replica("r", from_seq=-1)
+    with pytest.raises(ValueError, match="from_seq"):
+        log.register_replica("r", from_seq=4)  # past next_seq=3
+    assert "r" not in log.cursors  # nothing half-registered
+    assert log.register_replica("zero", from_seq=0) == 0
+    assert log.pending_count("zero") == 3
+    assert log.register_replica("head", from_seq=3) == 3
+    assert log.pending_count("head") == 0
+    # a cursor below the TRUNCATED floor pins batches that no longer exist:
+    # pending_count would stay positive forever with nothing drainable
+    trunc = ReplicationLog()
+    trunc.register_replica("a")
+    for i in range(3):
+        _log_batch(trunc, i)
+    for i in range(3):
+        trunc.ack("a", i)
+    assert trunc.truncate() == 3
+    with pytest.raises(ValueError, match="from_seq"):
+        trunc.register_replica("b", from_seq=0)
+    assert trunc.register_replica("b", from_seq=3) == 3  # head still fine
+
+
 def test_log_unregistered_replica_truncates_everything():
     log = ReplicationLog(capacity=2)
     _log_batch(log, 0)
@@ -632,12 +762,28 @@ def test_two_region_scenario_with_failover_replay():
     pre_failure = g.fs.online.dump_all("act", 1)
     pre_failure_off = g.fs.offline.canonical_history("act", 1)
 
+    # the lagging replicas have live lag gauges going into the failover
+    gauges = g.fs.monitor.system.snapshot()["gauges"]
+    assert gauges["replication/lag_batches/near"] > 0
+    assert gauges["replication/lag_batches/offline/near"] > 0
+
     g.mark_down("home")
     with pytest.raises(RegionDownError):
         g.route_read("home")  # nothing in sync while replicas lag
     info = g.failover()
     assert info["promoted"] == "near"  # nearest healthy, not set order
     assert info["replayed_batches"] > 0
+
+    # membership changed: the promoted region is home now (in sync by
+    # definition) and the dead ex-home left the serving set — neither may
+    # keep reporting its last per-replica lag/staleness (ISSUE 5 satellite)
+    gauges = g.fs.monitor.system.snapshot()["gauges"]
+    for region in ("near", "home"):
+        assert not any(
+            k.startswith("replication/") and k.endswith(f"/{region}")
+            for k in gauges
+        ), f"stale replication gauges for {region}"
+    assert "replication/lag_batches/far" in gauges  # surviving replica stays
 
     promoted = g.replicator.stores["near"]
     assert g.fs.online is promoted  # writes re-pointed at the new primary
