@@ -1,0 +1,353 @@
+"""Benchmark: the §2.1/§3.1.4 online serving front under closed-loop load.
+
+Three phases, written to ``BENCH_serving.json`` and gated by
+``check_regression.py``:
+
+  * COALESCED LOOKUP (raw amortization): many callers' point GETs coalesced
+    into one store dispatch, cache OFF — per-lookup cost vs coalesce size on
+    both engines.  This is the honest raw curve: micro-batching amortizes
+    the per-dispatch overhead, but under Pallas INTERPRET mode the kernel's
+    per-element compare-match cost is real (it is emulated elementwise), so
+    the raw kernel path stays a constant factor behind the host path at any
+    batch size here; on a real TPU the compare-match is one vector op per
+    slot block and the crossover lands where dispatch overhead amortizes —
+    i.e. exactly the ≥2k-coalesced regime this bench measures.
+  * CLOSED LOOP (the acceptance number): zipfian keys, bursty arrivals,
+    mixed read/write against a live ``Materializer`` tick cadence, through
+    the FULL front (dedup + hot-key cache + one coalesced dispatch per
+    round) on both engine stacks.  Per-lookup latency is end-to-end wall
+    time over submitted keys; the gate asserts kernel-stack ≤ 2x host-stack
+    while the mean dispatch still coalesces ≥ 2048 keys.  EVERYTHING the
+    exact gates read (hit rate, coalesce sizes, shed/degraded counts) is
+    driven by seeded RNG, round structure, and the logical data clock —
+    wall time only feeds the latency numbers, so hit rate reproduces
+    bit-for-bit across machines and ``--fast`` runs the same shape.
+  * OVERLOAD: queue budget forced to zero so every request faces the
+    degrade-or-shed decision: requests inside the staleness bound serve
+    stale from cache (age recorded), requests beyond it or uncached shed.
+    The staleness-bound assertion (stale reads never exceed the configured
+    bound) runs IN the bench and fails it outright — deadline-driven
+    admission (projected-wait vs budget) is covered by unit tests where
+    clocks are injectable.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.assets import Entity, Feature, FeatureSetSpec, MaterializationSettings
+from repro.core.dsl import DslTransform, RollingAgg, UDFTransform
+from repro.core.featurestore import FeatureStore
+from repro.core.online_store import OnlineStore
+from repro.core.serving import PENDING, ServingConfig, ServingFront
+from repro.core.table import Table
+from repro.data.sources import SyntheticEventSource
+
+HOUR = 3_600_000
+
+# closed-loop shape — FIXED (no --fast variant): the hit-rate and coalesce
+# gates are exact, so CI and the committed baseline must run one workload.
+# The cache holds a quarter of the key space: the zipfian head stays resident
+# (CLOCK ref bits) while the tail misses keep every round's coalesced
+# dispatch comfortably in the >= 2048-key regime the acceptance gate names.
+N_ENTITIES = 16_384
+CALLER_KEYS = 512
+BURST = (4, 8, 32, 16, 8, 24, 4, 32, 12, 28)  # callers per round (bursty)
+ROUNDS = 40
+TICK_EVERY = 8  # rounds between materializer ticks (the write mix)
+ZIPF_S = 1.0
+CACHE_CAPACITY = 4_096
+STALENESS_BOUND_MS = 2_000
+
+
+def _spec(n_feats: int = 2, ttl=None) -> FeatureSetSpec:
+    return FeatureSetSpec(
+        name="serve", version=1,
+        entity=Entity("customer", ("entity_id",)),
+        features=tuple(Feature(f"f{i}", "float32") for i in range(n_feats)),
+        source_name="direct",
+        transform=UDFTransform(lambda df, ctx: df, name="id"),
+        timestamp_col="ts",
+        materialization=MaterializationSettings(True, True, online_ttl=ttl),
+    )
+
+
+def _frame(rng, n: int, id_hi: int, ev_hi: int, n_feats: int = 2) -> Table:
+    cols = {
+        "entity_id": rng.integers(0, id_hi, n).astype(np.int64),
+        "ts": rng.integers(0, ev_hi, n).astype(np.int64),
+    }
+    for i in range(n_feats):
+        cols[f"f{i}"] = rng.random(n).astype(np.float32)
+    return Table(cols)
+
+
+def _zipf_cdf(n: int, s: float) -> np.ndarray:
+    w = 1.0 / np.arange(1, n + 1, dtype=np.float64) ** s
+    return np.cumsum(w) / w.sum()
+
+
+def _zipf_draw(rng, cdf: np.ndarray, size: int) -> np.ndarray:
+    return np.searchsorted(cdf, rng.random(size)).astype(np.int64)
+
+
+# -- phase 1: raw coalescing amortization -------------------------------------
+
+
+def bench_coalesced_lookup(
+    sizes=(256, 2_048, 16_384), reps: int = 3
+) -> list[dict]:
+    """Cache-off front: N callers coalesce into one dispatch per engine.
+    Reports per-lookup µs vs coalesce size — the raw amortization curve the
+    tentpole claims, without the cache's help."""
+    spec = _spec()
+    store = OnlineStore(num_partitions=16, merge_engine="kernel")
+    rng = np.random.default_rng(0)
+    store.merge(spec, _frame(rng, 3 * N_ENTITIES, N_ENTITIES, 100), 1_000)
+    front = ServingFront(store, config=ServingConfig(cache_capacity=0))
+    out = []
+    for total in sizes:
+        n_callers = 16
+        per = total // n_callers
+        row = {"coalesced_keys": total, "callers": n_callers}
+        for engine in ("host", "kernel"):
+            times = []
+            for rep in range(reps + 1):  # rep 0 = warmup (jit traces)
+                r = np.random.default_rng(100 + rep)
+                t0 = time.perf_counter()
+                tickets = [
+                    front.submit(
+                        "serve", 1,
+                        ids=r.integers(0, N_ENTITIES, per), now=1_050,
+                    )
+                    for _ in range(n_callers)
+                ]
+                front.flush("serve", 1, engine=engine, now=1_050)
+                if rep:
+                    times.append(time.perf_counter() - t0)
+                assert all(t.status == "done" for t in tickets)
+            row[engine] = {
+                "per_lookup_us": round(float(np.mean(times)) / total * 1e6, 3),
+                "dispatch_ms": round(float(np.mean(times)) * 1e3, 3),
+            }
+        row["kernel_over_host_x"] = round(
+            row["kernel"]["per_lookup_us"] / row["host"]["per_lookup_us"], 2
+        )
+        out.append(row)
+    return out
+
+
+# -- phase 2: closed-loop traffic through the full front ----------------------
+
+
+def _live_fs(merge_engine: str) -> FeatureStore:
+    fs = FeatureStore(
+        "bench-serving",
+        merge_engine=merge_engine,
+        serving=ServingConfig(
+            cache_capacity=CACHE_CAPACITY,
+            max_batch_keys=1 << 20,  # flushes are round-driven, not size-driven
+            staleness_bound_ms=STALENESS_BOUND_MS,
+        ),
+    )
+    fs.register_source(
+        SyntheticEventSource(
+            "tx", seed=7, num_entities=N_ENTITIES, events_per_bucket=2_500
+        )
+    )
+    fs.create_feature_set(
+        FeatureSetSpec(
+            name="act", version=1,
+            entity=Entity("customer", ("entity_id",)),
+            features=(Feature("s2", "float32"),),
+            source_name="tx",
+            transform=DslTransform(
+                "entity_id", "ts", [RollingAgg("s2", "amount", 2 * HOUR, "sum")]
+            ),
+            timestamp_col="ts", source_lookback=2 * HOUR,
+            materialization=MaterializationSettings(
+                offline_enabled=True, online_enabled=True,
+                schedule_interval=HOUR,
+            ),
+        )
+    )
+    # pre-insert the whole entity space so table capacity is FINAL before the
+    # measured loop: a mid-loop capacity grow would change every resident
+    # plane's shape and recompile every jitted kernel bucket, billing ~100 ms
+    # compile spikes to whichever stack's round the tick landed in
+    spec = fs.registry.get_feature_set("act", 1)
+    fs.online.merge(
+        spec,
+        Table(
+            {
+                "entity_id": np.arange(N_ENTITIES, dtype=np.int64),
+                "ts": np.zeros(N_ENTITIES, np.int64),
+                "s2": np.zeros(N_ENTITIES, np.float32),
+            }
+        ),
+        1,
+    )
+    fs.tick(now=4 * HOUR)  # initial materialization through the live pipeline
+    return fs
+
+
+def _run_closed_loop(engine: str) -> dict:
+    """One engine stack (kernel: kernel merges + kernel GETs; host: vector
+    merges + host GETs — mixing stacks would thrash table-sized mirror syncs
+    per switch, which is an anti-pattern the store docs call out)."""
+    fs = _live_fs("kernel" if engine == "kernel" else "vector")
+    front = fs.serving
+    cdf = _zipf_cdf(N_ENTITIES, ZIPF_S)
+    rng = np.random.default_rng(11)
+    hour = 4
+    read_wall = 0.0
+    total_keys = 0
+    dispatch_sizes = []
+    # shape warmup (off the books): dispatch sizes jitter round-to-round, so
+    # pre-trace every pow2 bucket the loop's store calls can land in — jit
+    # compiles must not be billed to (only) the kernel stack's wall clock
+    wrng = np.random.default_rng(999)
+    for warm_b in (128, 256, 512, 1_024, 2_048, 4_096, 8_192):
+        fs.online.lookup_encoded(
+            "act", 1,
+            wrng.integers(0, N_ENTITIES, warm_b).astype(np.int64),
+            now=fs.clock(), use_kernel=(engine == "kernel"),
+        )
+    # warmup round (off the books): first-touch cache fill
+    for _ in range(8):
+        front.submit("act", 1, ids=_zipf_draw(rng, cdf, CALLER_KEYS))
+    front.flush("act", 1, engine=engine)
+    # the warmup dispatch absorbs the remaining jit compiles; drop its stage
+    # samples so the reported p50/p99 describe only the measured rounds
+    for st in ("queue_wait", "assembly", "kernel", "decode", "request"):
+        fs.monitor.system.histograms.pop(f"serving/{st}_us", None)
+
+    base_hits = front.counters["cache_hits"]
+    base_misses = front.counters["cache_misses"]
+    for rnd in range(ROUNDS):
+        if rnd and rnd % TICK_EVERY == 0:
+            hour += 1
+            fs.tick(now=hour * HOUR)  # live writes -> cache invalidations
+        before = front.counters["coalesced_keys"]
+        callers = BURST[rnd % len(BURST)]
+        t0 = time.perf_counter()
+        tickets = [
+            front.submit("act", 1, ids=_zipf_draw(rng, cdf, CALLER_KEYS))
+            for _ in range(callers)
+        ]
+        front.flush("act", 1, engine=engine)
+        read_wall += time.perf_counter() - t0
+        assert all(t.status == "done" for t in tickets)
+        total_keys += callers * CALLER_KEYS
+        dispatched = front.counters["coalesced_keys"] - before
+        if dispatched:
+            dispatch_sizes.append(int(dispatched))
+
+    s = front.stats()
+    hits = s["cache_hits"] - base_hits
+    misses = s["cache_misses"] - base_misses
+    snap = fs.monitor.system.snapshot()
+    stages = {
+        st: {
+            k: round(snap["histograms"][f"serving/{st}_us"][k], 1)
+            for k in ("p50", "p99")
+        }
+        for st in ("queue_wait", "assembly", "kernel", "decode", "request")
+    }
+    assert s["max_stale_age_ms"] <= STALENESS_BOUND_MS  # the staleness SLA
+    return {
+        "engine": engine,
+        "rounds": ROUNDS,
+        "submitted_keys": total_keys,
+        "per_lookup_us": round(read_wall / total_keys * 1e6, 3),
+        "lookups_per_s": int(total_keys / read_wall),
+        "cache_hit_rate": round(hits / (hits + misses), 6),
+        "dispatches": len(dispatch_sizes),
+        "mean_coalesced_keys": int(np.mean(dispatch_sizes)),
+        "max_coalesced_keys": int(np.max(dispatch_sizes)),
+        "unique_keys_dispatched": int(s["unique_keys"]),
+        "store_keys_dispatched": int(s["store_keys"]),
+        "max_stale_age_ms": s["max_stale_age_ms"],
+        "stages_us": stages,
+    }
+
+
+def bench_closed_loop() -> dict:
+    host = _run_closed_loop("host")
+    kernel = _run_closed_loop("kernel")
+    ratio = round(kernel["per_lookup_us"] / host["per_lookup_us"], 3)
+    # the acceptance criterion, asserted in-bench: with >= 2048 coalesced
+    # in-flight keys per dispatch, the micro-batched kernel path serves
+    # within 2x of the host path per submitted lookup
+    assert kernel["mean_coalesced_keys"] >= 2_048, kernel
+    assert ratio <= 2.0, (ratio, kernel, host)
+    # determinism cross-check: both stacks saw the same seeded key stream,
+    # so their cache economics must agree exactly
+    assert kernel["cache_hit_rate"] == host["cache_hit_rate"]
+    return {"host": host, "kernel": kernel, "kernel_over_host_x": ratio}
+
+
+# -- phase 3: overload — degrade inside the bound, shed beyond it -------------
+
+
+def bench_overload() -> dict:
+    spec = _spec(ttl=None)
+    store = OnlineStore(num_partitions=8, merge_engine="vector")
+    rng = np.random.default_rng(3)
+    store.merge(spec, _frame(rng, 2_048, 512, 100), 1_000)
+    front = ServingFront(
+        store,
+        config=ServingConfig(
+            cache_capacity=1_024, staleness_bound_ms=STALENESS_BOUND_MS
+        ),
+    )
+    all_ids = np.arange(512, dtype=np.int64)
+    front.get("serve", 1, ids=all_ids, now=1_050, engine="host")  # warm cache
+    store.merge(spec, _frame(rng, 2_048, 512, 200), 5_000)  # supersede all
+    front.config.max_queue_keys = 0  # overload: nothing may queue
+
+    stale_ages = []
+    degraded = shed = 0
+    for now, lo, hi in (
+        (5_500, 0, 256),  # age  500 <= bound: degraded serves
+        (6_800, 128, 384),  # age 1800 <= bound: degraded serves
+        (7_500, 0, 256),  # age 2500  > bound: shed
+        (6_000, 512, 768),  # never written, nothing cached: shed
+    ):
+        t = front.submit(
+            "serve", 1, ids=np.arange(lo, hi, dtype=np.int64), now=now
+        )
+        assert t.status != PENDING
+        if t.status == "done":
+            degraded += 1
+            stale_ages.append(t.stale_age_ms)
+        else:
+            shed += 1
+    assert degraded == 2 and shed == 2, (degraded, shed)
+    assert front.max_stale_age_ms <= STALENESS_BOUND_MS  # never over the bound
+    return {
+        "staleness_bound_ms": STALENESS_BOUND_MS,
+        "degraded": degraded,
+        "shed": shed,
+        "stale_ages_ms": stale_ages,
+        "max_stale_age_ms": front.max_stale_age_ms,
+        "stale_reads_within_bound": True,  # asserted above
+    }
+
+
+def run(fast: bool = False) -> dict:
+    # the exact gates need one fixed shape; ``fast`` only trims the raw
+    # amortization sweep's repetitions, never the gated closed-loop phase
+    return {
+        "coalesced_lookup": bench_coalesced_lookup(reps=1 if fast else 3),
+        "closed_loop": bench_closed_loop(),
+        "overload": bench_overload(),
+    }
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=1))

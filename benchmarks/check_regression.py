@@ -1,9 +1,10 @@
 """Bench-regression gate: fail CI when the serving path gets slower.
 
 Compares the tier-1 bench smoke's output (``results/bench_fast.json``,
-written by ``benchmarks/run.py --fast --only online_store,geo_replication``)
-against the committed trajectory artifacts ``BENCH_online_store.json`` and
-``BENCH_geo_replication.json``.  Two classes of check:
+written by ``benchmarks/run.py --fast --only
+online_store,geo_replication,serving``) against the committed trajectory
+artifacts ``BENCH_online_store.json``, ``BENCH_geo_replication.json`` and
+``BENCH_serving.json``.  Classes of check:
 
 * TRANSFER / SHIPPED BYTES (deterministic): the device-resident protocol's
   steady-state byte counts and the geo replicator's per-plane shipped-byte
@@ -157,6 +158,75 @@ def check_geo_replication(
             failures.append(f"geo {field} is no longer asserted true")
 
 
+def check_serving(
+    cur: dict, base: dict, tolerance: float, scale: float, failures: list[str]
+) -> None:
+    """Serving-front gates (ISSUE 6).  Three classes:
+
+    ABSOLUTE (machine-independent by construction): the closed-loop
+    kernel-over-host per-lookup ratio must stay <= 2.0 while the mean
+    coalesced dispatch stays >= 2048 keys — the tentpole acceptance
+    criterion, re-checked on every run, not just when the baseline was
+    committed.  Overload must still degrade AND shed, with no stale read
+    over the configured bound.
+
+    EXACT (seeded + round-driven, so any drift is a behavior change): the
+    closed-loop cache hit rate per engine stack must not drop below the
+    committed value.
+
+    CALIBRATED (wall-clock): closed-loop lookups/s per stack within
+    ``tolerance`` of the committed baseline after the loop-engine
+    machine-speed rescale."""
+    c, b = cur["closed_loop"], base["closed_loop"]
+    ratio = c["kernel_over_host_x"]
+    if ratio > 2.0:
+        failures.append(f"serving kernel/host per-lookup ratio {ratio} > 2.0")
+    else:
+        print(f"  ok: serving kernel/host ratio {ratio}x (<= 2.0)")
+    for stack in ("host", "kernel"):
+        mean_co = c[stack]["mean_coalesced_keys"]
+        if mean_co < 2_048:
+            failures.append(
+                f"serving {stack} mean coalesced dispatch fell to {mean_co} "
+                f"keys (< 2048: out of the micro-batched regime)"
+            )
+        got, want = c[stack]["cache_hit_rate"], b[stack]["cache_hit_rate"]
+        if got < want:
+            failures.append(
+                f"serving {stack} cache hit rate dropped: {got} vs committed "
+                f"{want} (deterministic workload — this is a behavior change)"
+            )
+        else:
+            print(f"  ok: serving {stack} hit rate {got} (committed {want})")
+        rate = c[stack]["lookups_per_s"]
+        floor = int(b[stack]["lookups_per_s"] * scale * (1.0 - tolerance))
+        if rate < floor:
+            failures.append(
+                f"serving {stack} closed-loop dropped >{tolerance:.0%}: "
+                f"{rate} lookups/s vs calibrated floor {floor}"
+            )
+        else:
+            print(f"  ok: serving {stack} {rate} lookups/s (floor {floor})")
+        if c[stack]["max_stale_age_ms"] > base["overload"]["staleness_bound_ms"]:
+            failures.append(
+                f"serving {stack} served a read staler than the bound: "
+                f"{c[stack]['max_stale_age_ms']} ms"
+            )
+    o = cur["overload"]
+    if not (o["degraded"] > 0 and o["shed"] > 0):
+        failures.append(f"serving overload no longer degrades AND sheds: {o}")
+    elif o["max_stale_age_ms"] > o["staleness_bound_ms"]:
+        failures.append(
+            f"serving overload stale read {o['max_stale_age_ms']} ms over "
+            f"bound {o['staleness_bound_ms']} ms"
+        )
+    else:
+        print(
+            f"  ok: overload degraded {o['degraded']} / shed {o['shed']}, "
+            f"max stale {o['max_stale_age_ms']} ms <= {o['staleness_bound_ms']}"
+        )
+
+
 def main() -> None:
     repo = Path(__file__).resolve().parent.parent
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
@@ -174,6 +244,11 @@ def main() -> None:
         "--geo-baseline",
         default=str(repo / "BENCH_geo_replication.json"),
         help="committed geo-replication artifact (pass '' to skip geo gates)",
+    )
+    ap.add_argument(
+        "--serving-baseline",
+        default=str(repo / "BENCH_serving.json"),
+        help="committed serving-front artifact (pass '' to skip serving gates)",
     )
     ap.add_argument(
         "--tolerance",
@@ -194,6 +269,10 @@ def main() -> None:
         geo_cur = load_suite_result(Path(args.current), "geo_replication")
         geo_base = load_suite_result(Path(args.geo_baseline), "geo_replication")
         check_geo_replication(geo_cur, geo_base, args.tolerance, scale, failures)
+    if args.serving_baseline:
+        srv_cur = load_suite_result(Path(args.current), "serving")
+        srv_base = load_suite_result(Path(args.serving_baseline), "serving")
+        check_serving(srv_cur, srv_base, args.tolerance, scale, failures)
     if failures:
         print("\nREGRESSIONS DETECTED:", file=sys.stderr)
         for f in failures:

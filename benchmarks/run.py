@@ -5,6 +5,8 @@ One module per claim in the paper (§ refs in each module's docstring):
   rolling_dsl      §3.1.6  DSL-optimized aggregation vs black-box UDF
   pit_retrieval    §4.4    point-in-time offline retrieval throughput
   online_store     §2.1/§4.5  online GET latency + Algorithm-2 merge + staleness
+  serving          §2.1/§3.1.4  serving front: coalesced GET amortization,
+                   zipfian closed-loop latency + hit rate, overload shedding
   materialization  §4.3/§4.5.4  pipeline throughput, backfill, fault injection
   geo              §4.1.2  cross-region access vs geo-replication + stragglers
   geo_replication  §4.1.2  the replication data plane measured: ship/apply
@@ -38,6 +40,7 @@ def main() -> None:
         bench_online_store,
         bench_pit_retrieval,
         bench_rolling_dsl,
+        bench_serving,
         roofline_summary,
     )
 
@@ -51,6 +54,9 @@ def main() -> None:
         "online_store": lambda: bench_online_store.run(
             entity_counts=(1_000,) if args.fast else (1_000, 10_000)
         ),
+        # fixed-shape even under --fast: the serving gates (hit rate,
+        # coalesce sizes, overload counts) are exact, not calibrated
+        "serving": lambda: bench_serving.run(fast=args.fast),
         "materialization": lambda: bench_materialization.run(
             hours=6 if args.fast else 16,
             merge_window=20_000 if args.fast else 100_000,
@@ -87,6 +93,9 @@ def main() -> None:
     #                                the resident-cycle transfer profile (the
     #                                O(batch) guarantee of the device-resident
     #                                online store)
+    #   BENCH_serving.json         — serving-front trajectory: coalesced GET
+    #                                amortization, closed-loop latency + cache
+    #                                hit rate, overload degrade/shed counts
     def write_artifact(suite: str, filename: str, keys: tuple[str, ...]) -> None:
         res = results.get(suite)
         if not (res and res.get("ok")) or args.fast:
@@ -110,6 +119,10 @@ def main() -> None:
     write_artifact(
         "geo_replication", "BENCH_geo_replication.json",
         ("throughput", "read_latency", "failover"),
+    )
+    write_artifact(
+        "serving", "BENCH_serving.json",
+        ("coalesced_lookup", "closed_loop", "overload"),
     )
 
     failed = [n for n, r in results.items() if not r.get("ok")]

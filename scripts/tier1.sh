@@ -6,13 +6,16 @@
 #
 # Wraps the canonical command with PYTHONPATH setup so it works from any
 # checkout without an editable install.  After pytest, a fast benchmark
-# smoke runs the online-store + geo-replication suites — bench_online_store
-# raises on a transfer regression (table-sized host<->device traffic on the
-# serving path), bench_geo_replication asserts replica convergence on both
-# planes — and benchmarks/check_regression.py gates the fresh numbers
-# against the committed BENCH_online_store.json + BENCH_geo_replication.json
-# trajectory artifacts (transfer/shipped bytes exactly; merge and
-# replica-apply rows/s within a machine-calibrated 30%).
+# smoke runs the online-store + geo-replication + serving suites —
+# bench_online_store raises on a transfer regression (table-sized
+# host<->device traffic on the serving path), bench_geo_replication asserts
+# replica convergence on both planes, bench_serving asserts the coalesced
+# kernel GET stays within 2x of host and stale reads stay inside the bound —
+# and benchmarks/check_regression.py gates the fresh numbers against the
+# committed BENCH_online_store.json + BENCH_geo_replication.json +
+# BENCH_serving.json trajectory artifacts (transfer/shipped bytes and cache
+# hit rate exactly; merge/replica-apply/serving throughput within a
+# machine-calibrated 30%).
 # CI (.github/workflows/ci.yml) runs this same script, so a regression
 # fails tier-1 locally and the workflow identically.
 # Set TIER1_SKIP_BENCH=1 to run tests only.
@@ -24,10 +27,11 @@ python -m pytest -x -q -p no:cacheprovider "$@"
 
 if [[ "${TIER1_SKIP_BENCH:-0}" != "1" ]]; then
   echo "=== tier-1 bench smoke (serving-path transfer guard) ==="
-  python -m benchmarks.run --fast --only online_store,geo_replication \
+  python -m benchmarks.run --fast --only online_store,geo_replication,serving \
     --out results/bench_fast.json
   echo "=== tier-1 bench-regression gate ==="
   python -m benchmarks.check_regression \
     --current results/bench_fast.json --baseline BENCH_online_store.json \
-    --geo-baseline BENCH_geo_replication.json
+    --geo-baseline BENCH_geo_replication.json \
+    --serving-baseline BENCH_serving.json
 fi

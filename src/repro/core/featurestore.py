@@ -33,6 +33,7 @@ from repro.core.regions import (
     ReplicationPolicy,
 )
 from repro.core.scheduler import Scheduler
+from repro.core.serving import ServingConfig, ServingFront
 from repro.core.table import Table
 from repro.core.transform import FeatureWindow, SourceProtocol
 
@@ -53,6 +54,7 @@ class FeatureStore:
         online_partitions: int = 16,
         interpret: bool = True,
         merge_engine: str = "vector",
+        serving: Optional[ServingConfig] = None,
     ) -> None:
         self.name = name
         self._now = 0
@@ -76,6 +78,18 @@ class FeatureStore:
         if topology is None:
             topology = GeoTopology(regions={region: Region(region)})
         self.geo = GeoPlacement(topology, region, replication)
+        # every online GET goes through the serving front (core/serving.py).
+        # The default config is a pure passthrough (no cache, no admission
+        # control) so a plain store keeps exact OnlineStore.lookup semantics;
+        # pass a ServingConfig to turn on micro-batching/caching/shedding.
+        # Binding through a callable makes failover re-pointing self.online
+        # at a promoted replica transparent to the front.
+        self.serving = ServingFront(
+            lambda: self.online,
+            config=serving or ServingConfig(),
+            clock=self.clock,
+            monitor=self.monitor,
+        )
         # set by attach_replication when a GeoReplicator streams this store's
         # online merges cross-region (core/replication.py)
         self.replicator = None
@@ -181,12 +195,18 @@ class FeatureStore:
         *,
         use_kernel: bool = True,
     ) -> tuple[np.ndarray, np.ndarray]:
-        """Low-latency online retrieval (§2.1 item 4)."""
+        """Low-latency online retrieval (§2.1 item 4), routed through the
+        serving front: this GET joins any tickets already queued for the
+        table, so concurrent callers share one coalesced store dispatch."""
         import time as _time
 
         t0 = _time.perf_counter()
-        out = self.online.lookup(
-            name, version, id_columns, now=self.clock(), use_kernel=use_kernel
+        out = self.serving.get(
+            name,
+            version,
+            id_columns,
+            now=self.clock(),
+            engine="kernel" if use_kernel else "host",
         )
         self.monitor.record_lookup_latency((_time.perf_counter() - t0) * 1e6)
         return out

@@ -3,37 +3,106 @@
 Built-in (system) metrics plus custom (user-defined) metrics, and the
 paper's headline SLA metric: DATA STALENESS/FRESHNESS — how fresh the
 feature data computed by the platform is.
+
+Latency distributions are tracked by ``BoundedHistogram``: geometric
+buckets of fixed relative width, so the serving front can observe every
+request's stage latencies forever (p50/p99/p999) in O(1) memory instead of
+accumulating one float per sample.
 """
 
 from __future__ import annotations
 
-import dataclasses
+import math
 from collections import defaultdict
 from typing import Callable, Optional
 
-__all__ = ["Metrics", "HealthMonitor"]
+import numpy as np
+
+__all__ = ["BoundedHistogram", "Metrics", "HealthMonitor"]
 
 
-@dataclasses.dataclass
-class _Histogram:
-    values: list[float] = dataclasses.field(default_factory=list)
+class BoundedHistogram:
+    """Quantile sketch in O(1) memory: geometric buckets of relative width
+    ``resolution`` spanning [lo, hi); values clamp into the edge buckets.
+
+    A reported quantile is the geometric midpoint of the bucket holding the
+    rank (clamped to the observed min/max), so it lands within ~resolution
+    of the exact sample quantile — unit-tested against numpy on known
+    distributions — while storage stays one fixed int64 bucket array
+    (~500 entries at the defaults) no matter how many samples arrive.
+    Default bounds cover 10 ns .. 1000 s in microsecond units, i.e. any
+    latency this system can observe."""
+
+    __slots__ = ("lo", "growth", "counts", "n", "total", "vmin", "vmax")
+
+    def __init__(
+        self, lo: float = 1e-2, hi: float = 1e9, resolution: float = 0.05
+    ) -> None:
+        self.lo = float(lo)
+        self.growth = math.log1p(resolution)
+        nbuckets = int(math.ceil(math.log(hi / lo) / self.growth)) + 1
+        self.counts = np.zeros(nbuckets, np.int64)
+        self.n = 0
+        self.total = 0.0
+        self.vmin = math.inf
+        self.vmax = -math.inf
+
+    def _index(self, v: float) -> int:
+        if v <= self.lo:
+            return 0
+        i = 1 + int(math.log(v / self.lo) / self.growth)
+        return min(i, len(self.counts) - 1)
 
     def observe(self, v: float) -> None:
-        self.values.append(v)
+        v = float(v)
+        self.counts[self._index(v)] += 1
+        self.n += 1
+        self.total += v
+        self.vmin = min(self.vmin, v)
+        self.vmax = max(self.vmax, v)
+
+    def observe_batch(self, values) -> None:
+        """Vectorized ``observe`` — one bincount instead of a Python loop
+        (the serving front records per-ticket queue waits this way)."""
+        values = np.asarray(values, np.float64)
+        if values.size == 0:
+            return
+        idx = np.zeros(values.shape, np.int64)
+        above = values > self.lo
+        idx[above] = 1 + (np.log(values[above] / self.lo) / self.growth).astype(
+            np.int64
+        )
+        np.clip(idx, 0, len(self.counts) - 1, out=idx)
+        self.counts += np.bincount(idx, minlength=len(self.counts))
+        self.n += values.size
+        self.total += float(values.sum())
+        self.vmin = min(self.vmin, float(values.min()))
+        self.vmax = max(self.vmax, float(values.max()))
+
+    def quantile(self, q: float) -> float:
+        if self.n == 0:
+            return float("nan")
+        rank = min(max(int(math.ceil(q * self.n)), 1), self.n)
+        cum = np.cumsum(self.counts)
+        i = int(np.searchsorted(cum, rank))
+        # geometric midpoint of bucket i, clamped to the observed range; the
+        # underflow bucket (everything <= lo) reports the observed min
+        mid = self.lo * math.exp((i - 0.5) * self.growth) if i else self.vmin
+        return min(max(mid, self.vmin), self.vmax)
 
     def percentile(self, p: float) -> float:
-        if not self.values:
-            return float("nan")
-        xs = sorted(self.values)
-        i = min(len(xs) - 1, int(p / 100.0 * len(xs)))
-        return xs[i]
+        return self.quantile(p / 100.0)
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.n if self.n else float("nan")
 
 
 class Metrics:
     def __init__(self) -> None:
         self.counters: dict[str, float] = defaultdict(float)
         self.gauges: dict[str, float] = {}
-        self.histograms: dict[str, _Histogram] = defaultdict(_Histogram)
+        self.histograms: dict[str, BoundedHistogram] = defaultdict(BoundedHistogram)
 
     def inc(self, name: str, by: float = 1.0) -> None:
         self.counters[name] += by
@@ -44,6 +113,9 @@ class Metrics:
     def observe(self, name: str, value: float) -> None:
         self.histograms[name].observe(value)
 
+    def observe_batch(self, name: str, values) -> None:
+        self.histograms[name].observe_batch(values)
+
     def snapshot(self) -> dict:
         return {
             "counters": dict(self.counters),
@@ -52,7 +124,9 @@ class Metrics:
                 k: {
                     "p50": h.percentile(50),
                     "p99": h.percentile(99),
-                    "n": len(h.values),
+                    "p999": h.percentile(99.9),
+                    "max": h.vmax,
+                    "n": h.n,
                 }
                 for k, h in self.histograms.items()
             },
@@ -87,6 +161,19 @@ class HealthMonitor:
 
     def record_lookup_latency(self, us: float) -> None:
         self.system.observe("online_lookup_us", us)
+
+    def record_serving_stage(self, stage: str, us: float) -> None:
+        """One serving-front pipeline stage (queue_wait / assembly / kernel /
+        decode / request) for one dispatch — p50/p99/p999 per stage ride the
+        bounded histograms, so the front can observe every request."""
+        self.system.observe(f"serving/{stage}_us", us)
+
+    def record_serving_stale_age(self, ms: float) -> None:
+        """Age (logical ms since the cached row was superseded) of one
+        degraded bounded-staleness serve — the serving front's overload
+        escape hatch; the configured bound is asserted over this
+        histogram's max."""
+        self.system.observe("serving/stale_age_ms", ms)
 
     def record_replication_lag(
         self,

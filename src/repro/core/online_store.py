@@ -103,13 +103,10 @@ def o_batch_byte_budget(batch: int, record_bytes: int) -> int:
     return 64 * batch * record_bytes
 
 
-def _bucket(n: int, floor: int = 128) -> int:
-    """Round a batch length up to a power of two (>= floor) so the jitted
-    device ops see a bounded set of shapes instead of retracing per batch."""
-    b = floor
-    while b < n:
-        b *= 2
-    return b
+# the ONE shape-bucketing rule (kernels/online_lookup/ops.pow2_bucket):
+# round batch lengths up to a power of two so the jitted device ops see a
+# bounded set of shapes instead of retracing per batch size
+_bucket = lookup_ops.pow2_bucket
 
 
 def _nbytes(*arrays) -> int:
@@ -717,6 +714,11 @@ class OnlineStore:
         )
 
     # -- reads ----------------------------------------------------------------
+    def spec(self, name: str, version: int) -> FeatureSetSpec:
+        """The registered spec for one table (KeyError if unknown) — the
+        serving front resolves feature width/TTL through this."""
+        return self._specs[(name, version)]
+
     def lookup(
         self,
         name: str,
@@ -733,13 +735,38 @@ class OnlineStore:
         scan + on-device row gather, O(batch) traffic); ``use_kernel=False``
         serves from the host mirror, syncing it first if a kernel merge left
         it stale — both paths return byte-identical answers."""
+        return self.lookup_encoded(
+            name, version, encode_keys(id_columns), now=now, use_kernel=use_kernel
+        )[:2]
+
+    def lookup_encoded(
+        self,
+        name: str,
+        version: int,
+        ids: np.ndarray,
+        *,
+        now: Optional[int] = None,
+        use_kernel: bool = True,
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """``lookup`` over ALREADY-ENCODED int64 keys — the serving front's
+        dispatch path (it encodes once at admission and coalesces encoded
+        keys across callers).  Returns (values (B, D) float32, found (B,)
+        bool, creation_ts (B,) int64); ``creation_ts`` is the matched row's
+        creation timestamp where found and 0 elsewhere (misses AND
+        TTL-expired rows), so a caller caching decoded rows can re-check TTL
+        later without another store read.  Both engines return byte-identical
+        triples."""
         spec = self._specs[(name, version)]
         t = self._tables[(name, version)]
-        ids = encode_keys(id_columns)
+        ids = np.asarray(ids, np.int64)
         b = len(ids)
         d = t.values.shape[-1]
         if b == 0:
-            return np.zeros((0, d), np.float32), np.zeros(0, bool)
+            return (
+                np.zeros((0, d), np.float32),
+                np.zeros(0, bool),
+                np.zeros(0, np.int64),
+            )
         ttl = spec.materialization.online_ttl
         if use_kernel:
             dev = self._ensure_device(t)
@@ -768,23 +795,24 @@ class OnlineStore:
             self.transfers["d2h_bytes"] += bb * (d * 4 + 8)
             vals = np.array(vals_d)[:b]
             vals[~found] = 0.0
+            cr = lookup_ops.combine_i64(
+                np.asarray(crlo_d)[:b], np.asarray(crhi_d)[:b]
+            )
             if now is not None and ttl is not None:
-                cr = lookup_ops.combine_i64(
-                    np.asarray(crlo_d)[:b], np.asarray(crhi_d)[:b]
-                )
                 expired = found & (now - cr > ttl)
                 found = found & ~expired
                 vals[expired] = 0.0
-            return vals, found
+            return vals, found, np.where(found, cr, 0)
         self._sync_host(t)
         vals = np.zeros((b, d), np.float32)
         found = np.zeros(b, bool)
         p, s, hit = self._index_find(t, ids)
+        cr = t.creation_ts[p, s]
         if now is not None and ttl is not None:
-            hit = hit & ~(now - t.creation_ts[p, s] > ttl)
+            hit = hit & ~(now - cr > ttl)
         found[hit] = True
         vals[hit] = t.values[p[hit], s[hit]]
-        return vals, found
+        return vals, found, np.where(found, cr, 0)
 
     def get_record(
         self, name: str, version: int, id_columns: list[np.ndarray]

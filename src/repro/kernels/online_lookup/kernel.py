@@ -43,9 +43,9 @@ def _lookup_kernel(qlo_ref, qhi_ref, klo_ref, khi_ref, out_ref, best_ref):
     def _init():
         best_ref[...] = jnp.zeros_like(best_ref)
 
-    klo = klo_ref[...]                                    # (1, Cb)
+    klo = klo_ref[...]  # (1, Cb)
     khi = khi_ref[...]
-    qlo = qlo_ref[...]                                    # (1, Q)
+    qlo = qlo_ref[...]  # (1, Q)
     qhi = qhi_ref[...]
 
     cblk = klo.shape[1]
@@ -54,12 +54,12 @@ def _lookup_kernel(qlo_ref, qhi_ref, klo_ref, khi_ref, out_ref, best_ref):
 
     # (Q, Cb) compare-match on both 32-bit planes.
     match = (klo == qlo.T) & (khi == qhi.T)
-    scored = jnp.where(match, slot + 1, 0)                # 1-based, 0 = miss
+    scored = jnp.where(match, slot + 1, 0)  # 1-based, 0 = miss
     best_ref[...] = jnp.maximum(best_ref[...], scored.max(axis=1)[:, None])
 
     @pl.when(cb == n_cb - 1)
     def _write():
-        out_ref[...] = best_ref[...].T - 1                # back to 0-based/-1
+        out_ref[...] = best_ref[...].T - 1  # back to 0-based/-1
 
 
 @functools.partial(jax.jit, static_argnames=("slot_block", "interpret"))

@@ -35,6 +35,7 @@ __all__ = [
     "partition_of",
     "gather_rows",
     "lookup",
+    "pow2_bucket",
     "route_and_lookup",
     "route_flat",
     "route_queries",
@@ -42,6 +43,18 @@ __all__ = [
 
 _LANE = 128
 _MIX = np.uint64(0x9E3779B97F4A7C15)
+
+
+def pow2_bucket(n: int, floor: int = _LANE) -> int:
+    """Round a host-side length up to a power of two (>= ``floor``) — the ONE
+    shape-bucketing rule every jitted device op on the GET/merge path uses, so
+    a stream of varying batch sizes maps to a small fixed set of compiled
+    entries instead of re-tracing per size (log2 buckets, not one per
+    routing high-water mark)."""
+    b = floor
+    while b < n:
+        b *= 2
+    return b
 
 
 def split_i64(ids: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
@@ -143,15 +156,20 @@ def route_queries(
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """Route a flat id batch into kernel-ready (P, Q) query planes.
 
-    Returns (q_lo, q_hi, part, pos): int32 planes lane-padded host-side (one
-    jit trace per lane bucket instead of per routing high-water mark) with
-    every pad entry stamped to the (-2, -2) sentinel — the ONE place that
-    invariant lives: pads must match neither live keys (split planes can be
-    anything >= 0) nor the empty-slot sentinel (-1, -1).  ``part``/``pos``
-    un-permute kernel results back to batch order."""
+    Returns (q_lo, q_hi, part, pos): int32 planes padded host-side to a
+    power-of-two lane bucket (``pow2_bucket``) with every pad entry stamped
+    to the (-2, -2) sentinel — the ONE place that invariant lives: pads must
+    match neither live keys (split planes can be anything >= 0) nor the
+    empty-slot sentinel (-1, -1).  Power-of-two (not next-multiple-of-128)
+    padding matters for the serving path: the routing high-water mark
+    jitters run-to-run with key imbalance, and at large coalesced batches a
+    128-granular pad would straddle bucket boundaries and re-trace the
+    jitted kernel per batch; log2 buckets make repeated same-scale GETs hit
+    the same compiled entry.  ``part``/``pos`` un-permute kernel results
+    back to batch order."""
     routed_ids, part, pos = route_flat(num_partitions, ids)[:3]
     qmax = routed_ids.shape[1]
-    qpad = _round_up(qmax, _LANE)
+    qpad = pow2_bucket(qmax)
     if qpad != qmax:
         routed_ids = np.concatenate(
             [routed_ids, np.full((num_partitions, qpad - qmax), -2, np.int64)],

@@ -1,0 +1,517 @@
+"""Serving front (core/serving.py): the §2.1/§3.1.4 request plane.
+
+The three contracts under test, in the order the ISSUE states them:
+
+  * COALESCING IS INVISIBLE — a multi-caller batch the scheduler coalesces
+    into one store dispatch returns byte-identical rows (values, hit mask,
+    creation_ts) to per-request ``lookup`` calls, including TTL-expired and
+    missing keys, on BOTH engines.  Same with the hot-key cache on: cached
+    rows must be indistinguishable from store rows.
+  * THE CACHE IS COHERENT AND STALENESS IS BOUNDED — merges invalidate via
+    ``merge_listeners`` (mark-stale, not drop), fresh serves never return a
+    superseded row, and degraded overload serves never exceed the configured
+    staleness bound (beyond it, the request sheds).
+  * ADMISSION CONTROL DEGRADES BEFORE IT REJECTS — queue-over-budget
+    requests fall back to bounded-staleness cache hits when possible and
+    shed otherwise; deadline-driven ``pump`` dispatches exactly the queues
+    whose head ticket can no longer wait.
+
+Plus the retrace-churn satellite: request-size jitter within one pow2
+bucket must NOT grow the jitted kernel's compile cache.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.assets import Entity, Feature, FeatureSetSpec, MaterializationSettings
+from repro.core.dsl import UDFTransform
+from repro.core.keys import encode_keys
+from repro.core.monitoring import HealthMonitor
+from repro.core.online_store import OnlineStore
+from repro.core.serving import DONE, PENDING, SHED, ServingConfig, ServingFront
+from repro.core.table import Table
+from repro.kernels.online_lookup import ops as lookup_ops
+
+
+def make_spec(ttl=None, n_feats=2):
+    return FeatureSetSpec(
+        name="fs",
+        version=1,
+        entity=Entity("cust", ("entity_id",)),
+        features=tuple(Feature(f"f{i}") for i in range(n_feats)),
+        source_name="src",
+        transform=UDFTransform(lambda df, ctx: df, name="id"),
+        materialization=MaterializationSettings(True, True, online_ttl=ttl),
+    )
+
+
+def make_frame(rng, n, id_hi, ev_hi, n_feats=2):
+    cols = {
+        "entity_id": rng.integers(0, id_hi, n).astype(np.int64),
+        "ts": rng.integers(0, ev_hi, n).astype(np.int64),
+    }
+    for i in range(n_feats):
+        cols[f"f{i}"] = rng.random(n).astype(np.float32)
+    return Table(cols)
+
+
+def seeded_store(*, ttl=None, engine="vector", seed=0):
+    """Store with two merge generations (creation_ts 1_000 and 1_050), so a
+    TTL of 100 at now=1_120 expires the older cohort only."""
+    spec = make_spec(ttl=ttl)
+    store = OnlineStore(num_partitions=4, merge_engine=engine)
+    rng = np.random.default_rng(seed)
+    store.merge(spec, make_frame(rng, 80, 40, 50), 1_000)
+    store.merge(spec, make_frame(rng, 80, 40, 80), 1_050)
+    return store, spec
+
+
+def assert_ticket_matches_store(t, store, *, now, use_kernel):
+    """The satellite-c oracle: ticket rows byte-identical to a per-request
+    ``lookup_encoded`` for the same ids (values, found, creation_ts)."""
+    vr, fr, cr = store.lookup_encoded("fs", 1, t.ids, now=now, use_kernel=use_kernel)
+    np.testing.assert_array_equal(t.found, fr)
+    np.testing.assert_array_equal(t.values, vr)
+    np.testing.assert_array_equal(t.creation_ts, cr)
+
+
+# -- coalescing parity (satellite c) ------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ["host", "kernel"])
+def test_coalesced_batch_identical_to_per_request(engine):
+    """Multiple callers' GETs — overlapping ids, missing ids, TTL-expired
+    ids — coalesce into ONE dispatch whose scattered results are
+    byte-identical to per-request lookups on the same engine."""
+    store_engine = "kernel" if engine == "kernel" else "vector"
+    store, _ = seeded_store(ttl=100, engine=store_engine)
+    front = ServingFront(store, config=ServingConfig(cache_capacity=0))
+    now = 1_120  # gen-1 rows (creation 1_000) expired, gen-2 (1_050) live
+    use_kernel = engine == "kernel"
+
+    callers = [
+        [np.arange(0, 15, dtype=np.int64)],  # mix of live/expired
+        [np.arange(10, 30, dtype=np.int64)],  # overlaps caller 0
+        [np.arange(35, 60, dtype=np.int64)],  # ids >= 40 never written
+        [np.array([7, 7, 1000, 3], dtype=np.int64)],  # dupes + far miss
+    ]
+    tickets = [front.submit("fs", 1, ids, now=now) for ids in callers]
+    assert all(t.status == PENDING for t in tickets)
+    assert front.flush("fs", 1, engine=engine, now=now) == 1  # ONE dispatch
+    for t in tickets:
+        assert t.status == DONE
+        assert_ticket_matches_store(t, store, now=now, use_kernel=use_kernel)
+    s = front.stats()
+    assert s["dispatches"] == 1
+    assert s["coalesced_keys"] == sum(len(c[0]) for c in callers)
+    assert s["unique_keys"] < s["coalesced_keys"]  # dedup actually happened
+    # expired rows surface as misses with zeroed values and creation_ts
+    t0 = tickets[0]
+    assert not t0.found.all() and (t0.creation_ts[~t0.found] == 0).all()
+    assert (t0.values[~t0.found] == 0).all()
+
+
+@pytest.mark.parametrize("engine", ["host", "kernel"])
+def test_cache_on_parity_and_coherence_across_merges(engine):
+    """With the hot-key cache enabled, every GET — cold, cached, and after
+    an invalidating merge — still matches the store exactly."""
+    store_engine = "kernel" if engine == "kernel" else "vector"
+    store, spec = seeded_store(ttl=500, engine=store_engine)
+    front = ServingFront(store, config=ServingConfig(cache_capacity=128))
+    rng = np.random.default_rng(42)
+    use_kernel = engine == "kernel"
+    now = 1_100
+    for round_ in range(6):
+        ids = [rng.integers(0, 50, 24).astype(np.int64)]
+        t = front.submit("fs", 1, ids, now=now)
+        if t.status == PENDING:
+            front.flush("fs", 1, engine=engine, now=now)
+        assert t.status == DONE
+        assert_ticket_matches_store(t, store, now=now, use_kernel=use_kernel)
+        if round_ % 2 == 1:  # interleave writes: cache must stay coherent
+            store.merge(spec, make_frame(rng, 30, 50, 200 + round_), 1_200 + round_)
+            now = 1_250 + round_
+    assert front.stats()["cache_hits"] > 0
+    assert front.stats()["cache_invalidations"] > 0
+
+
+def test_cached_row_expires_like_the_store():
+    """A cached FOUND row past its TTL serves as a miss — the cache re-checks
+    TTL from the stored creation_ts at serve time, exactly like the store."""
+    store, _ = seeded_store(ttl=100)
+    front = ServingFront(store, config=ServingConfig(cache_capacity=64))
+    ids = [np.arange(10, dtype=np.int64)]
+    v1, f1 = front.get("fs", 1, ids, now=1_060, engine="host")
+    assert f1.any()
+    # same keys, far future: every row expired; cache must agree with store
+    t = front.submit("fs", 1, ids, now=10_000)
+    if t.status == PENDING:
+        front.flush("fs", 1, engine="host", now=10_000)
+    assert_ticket_matches_store(t, store, now=10_000, use_kernel=False)
+    assert not t.found.any()
+
+
+def test_negative_caching_and_fastpath():
+    """Missing keys cache too: the second identical request is served
+    entirely from cache (zero additional dispatches), still all-miss."""
+    store, _ = seeded_store()
+    front = ServingFront(store, config=ServingConfig(cache_capacity=64))
+    missing = [np.array([900, 901, 902], dtype=np.int64)]
+    v1, f1 = front.get("fs", 1, missing, engine="host")
+    assert not f1.any()
+    d1 = front.stats()["dispatches"]
+    v2, f2 = front.get("fs", 1, missing, engine="host")
+    assert not f2.any()
+    assert front.stats()["dispatches"] == d1  # pure cache fast path
+    assert front.stats()["cache_fastpath"] >= 1
+
+
+# -- hot-key cache mechanics --------------------------------------------------
+
+
+def test_clock_eviction_bounds_cache_size():
+    store, _ = seeded_store()
+    front = ServingFront(store, config=ServingConfig(cache_capacity=8))
+    for base in range(0, 40, 4):
+        front.get(
+            "fs", 1, [np.arange(base, base + 4, dtype=np.int64)], engine="host"
+        )
+    assert front.cache.size == 8
+    assert front.cache.evictions > 0
+    # hot key survives the clock hand: touch it between eviction pressure
+    hot = [np.array([2], dtype=np.int64)]
+    front.get("fs", 1, hot, engine="host")
+    for base in range(100, 120, 4):
+        front.get(
+            "fs", 1, [np.arange(base, base + 4, dtype=np.int64)], engine="host"
+        )
+        front.get("fs", 1, hot, engine="host")  # keep ref bit set
+    hot_key = int(encode_keys(hot)[0])
+    assert front.cache.get(("fs", 1), hot_key) is not None
+
+
+def test_mark_stale_vectorized_large_merge():
+    """A merge touching far more keys than the cache holds must invalidate
+    correctly through the vectorized np.isin path."""
+    spec = make_spec()
+    store = OnlineStore(num_partitions=4, merge_engine="vector")
+    rng = np.random.default_rng(1)
+    store.merge(spec, make_frame(rng, 2_000, 1_000, 50), 1_000)
+    front = ServingFront(store, config=ServingConfig(cache_capacity=16))
+    ids = [np.arange(16, dtype=np.int64)]
+    front.get("fs", 1, ids, now=1_100, engine="host")
+    assert front.cache.size == 16
+    # touches ~1000 distinct ids >> 16 cached entries
+    store.merge(spec, make_frame(rng, 2_000, 1_000, 60), 2_000)
+    stale = [
+        e
+        for e in front.cache._tables[("fs", 1)].values()
+        if e.stale_since is not None
+    ]
+    assert len(stale) == front.cache.invalidations > 0
+    assert all(e.stale_since == 2_000 for e in stale)
+    # and a fresh GET returns post-merge truth
+    t = front.submit("fs", 1, ids, now=2_100)
+    if t.status == PENDING:
+        front.flush("fs", 1, engine="host", now=2_100)
+    assert_ticket_matches_store(t, store, now=2_100, use_kernel=False)
+
+
+def test_first_superseding_write_wins_staleness_onset():
+    store, spec = seeded_store()
+    front = ServingFront(store, config=ServingConfig(cache_capacity=64))
+    ids = [np.arange(8, dtype=np.int64)]
+    front.get("fs", 1, ids, now=1_100, engine="host")
+    rng = np.random.default_rng(5)
+    s1 = store.merge(spec, make_frame(rng, 40, 8, 100), 2_000)
+    s2 = store.merge(spec, make_frame(rng, 40, 8, 120), 3_000)  # second supersede
+    entries = front.cache._tables[("fs", 1)]
+    twice = set(map(int, s1["touched_keys"])) & set(map(int, s2["touched_keys"]))
+    assert twice  # both merges overwrote at least one cached id
+    for k in twice:
+        if k in entries:
+            # ages from the FIRST superseding merge, never resets
+            assert entries[k].stale_since == 2_000
+
+
+# -- admission control / load shedding ----------------------------------------
+
+
+def overloaded_front(store, **cfg):
+    """max_queue_keys=0 makes every residual over-budget, forcing the
+    degrade-or-shed decision deterministically."""
+    return ServingFront(
+        store,
+        config=ServingConfig(cache_capacity=64, max_queue_keys=0, **cfg),
+    )
+
+
+def test_overload_degrades_to_bounded_staleness_hits():
+    store, spec = seeded_store(ttl=100_000)
+    # warm phase: normal config fills the cache
+    warm = ServingFront(store, config=ServingConfig(cache_capacity=64))
+    ids = [np.arange(10, dtype=np.int64)]
+    v_warm, f_warm = warm.get("fs", 1, ids, now=1_100, engine="host")
+    # supersede every cached row at ts=2_000, then overload
+    rng = np.random.default_rng(9)
+    store.merge(spec, make_frame(rng, 60, 10, 150), 2_000)
+    warm.config.max_queue_keys = 0
+    bound = warm.config.staleness_bound_ms  # default 2_000
+    t = warm.submit("fs", 1, ids, now=2_000 + bound)  # age == bound: allowed
+    assert t.status == DONE and t.degraded
+    assert t.stale_age_ms == bound
+    assert warm.max_stale_age_ms <= bound  # the in-test staleness assertion
+    # degraded result is the superseded snapshot, not the new truth
+    np.testing.assert_array_equal(t.values, v_warm)
+    np.testing.assert_array_equal(t.found, f_warm)
+
+
+def test_overload_sheds_beyond_staleness_bound():
+    store, spec = seeded_store(ttl=100_000)
+    warm = ServingFront(store, config=ServingConfig(cache_capacity=64))
+    ids = [np.arange(10, dtype=np.int64)]
+    warm.get("fs", 1, ids, now=1_100, engine="host")
+    rng = np.random.default_rng(9)
+    store.merge(spec, make_frame(rng, 60, 10, 150), 2_000)
+    warm.config.max_queue_keys = 0
+    bound = warm.config.staleness_bound_ms
+    t = warm.submit("fs", 1, ids, now=2_001 + bound)  # one ms too old
+    assert t.status == SHED
+    assert warm.stats()["shed"] == 1
+    assert warm.max_stale_age_ms == 0.0  # nothing stale was ever served
+
+
+def test_overload_sheds_on_cold_cache_and_sync_get_raises():
+    store, _ = seeded_store()
+    front = overloaded_front(store)
+    t = front.submit("fs", 1, [np.arange(4, dtype=np.int64)], now=1_100)
+    assert t.status == SHED  # nothing cached -> nothing to degrade to
+    with pytest.raises(RuntimeError, match="shed"):
+        front.get("fs", 1, [np.arange(4, dtype=np.int64)], now=1_100)
+
+
+def test_deadline_admission_uses_projected_wait():
+    """A request whose projected queue wait exceeds its deadline is refused
+    at admission even though the hard queue bound has room."""
+    store, _ = seeded_store()
+    front = ServingFront(
+        store, config=ServingConfig(cache_capacity=0, deadline_ms=10.0)
+    )
+    front._ema_keys_per_ms = 1.0  # calibrated: 1 key per ms
+    ok = front.submit("fs", 1, [np.arange(5, dtype=np.int64)])  # ~5ms: fits
+    assert ok.status == PENDING
+    # queue now 5 keys; +20 more projects 25ms >> 10ms deadline
+    t = front.submit("fs", 1, [np.arange(20, dtype=np.int64)])
+    assert t.status == SHED
+    # an explicit generous deadline still gets in
+    t2 = front.submit(
+        "fs", 1, [np.arange(20, dtype=np.int64)], deadline_ms=1_000.0
+    )
+    assert t2.status == PENDING
+    front.flush("fs", 1, engine="host")
+    assert ok.status == DONE and t2.status == DONE
+
+
+def test_pump_dispatches_on_deadline_pressure():
+    rt = {"now": 0.0}
+    store, _ = seeded_store()
+    front = ServingFront(
+        store,
+        config=ServingConfig(cache_capacity=0, deadline_ms=50.0),
+        request_clock=lambda: rt["now"],
+    )
+    t = front.submit("fs", 1, [np.arange(6, dtype=np.int64)], now=1_100)
+    assert t.status == PENDING
+    assert front.pump(now=1_100) == 0  # fresh ticket: plenty of budget left
+    rt["now"] = 49.0
+    assert front.pump(now=1_100) == 0
+    rt["now"] = 50.0  # waited >= deadline: due now
+    assert front.pump(now=1_100) == 1
+    assert t.status == DONE
+    assert_ticket_matches_store(t, store, now=1_100, use_kernel=False)
+
+
+def test_batch_size_trigger_auto_flushes():
+    store, _ = seeded_store()
+    front = ServingFront(
+        store, config=ServingConfig(cache_capacity=0, max_batch_keys=32)
+    )
+    t1 = front.submit("fs", 1, [np.arange(20, dtype=np.int64)], now=1_100)
+    assert t1.status == PENDING  # 20 < 32: waits for company
+    t2 = front.submit("fs", 1, [np.arange(20, 40, dtype=np.int64)], now=1_100)
+    # 40 >= 32: the scheduler flushed without an explicit flush() call
+    assert t1.status == DONE and t2.status == DONE
+    assert front.stats()["queued_keys"] == 0
+
+
+def test_flush_splits_oversized_queues():
+    store, _ = seeded_store()
+    front = ServingFront(
+        store, config=ServingConfig(cache_capacity=0, max_batch_keys=16)
+    )
+    tickets = [
+        front.submit("fs", 1, [np.arange(b, b + 10, dtype=np.int64)], now=1_100)
+        for b in (0, 10, 20)
+    ]
+    # second submit tips the queue to 20 >= 16: auto-flush drains it in
+    # whole-ticket chunks of <= 16 keys -> one dispatch per 10-key ticket
+    assert front.stats()["dispatches"] == 2
+    assert tickets[2].status == PENDING  # third arrived after the drain
+    front.flush("fs", 1, engine="host", now=1_100)
+    assert front.stats()["dispatches"] == 3
+    assert all(t.status == DONE for t in tickets)
+    for t in tickets:
+        assert_ticket_matches_store(t, store, now=1_100, use_kernel=False)
+
+
+# -- store rebinding (failover) -----------------------------------------------
+
+
+def test_front_rebinds_after_store_swap():
+    """Failover re-points the store reference: the front notices on the next
+    request — cache dropped, merge listener moved to the promoted store."""
+    store_a, spec = seeded_store(seed=0)
+    store_b, _ = seeded_store(seed=99)  # different data
+    holder = {"store": store_a}
+    front = ServingFront(
+        lambda: holder["store"], config=ServingConfig(cache_capacity=64)
+    )
+    ids = [np.arange(12, dtype=np.int64)]
+    front.get("fs", 1, ids, now=1_100, engine="host")
+    assert front.cache.size > 0
+    assert len(store_a.merge_listeners) == 1
+
+    holder["store"] = store_b  # the failover
+    v, f = front.get("fs", 1, ids, now=1_100, engine="host")
+    vb, fb = store_b.lookup("fs", 1, ids, now=1_100, use_kernel=False)
+    np.testing.assert_array_equal(v, vb)
+    np.testing.assert_array_equal(f, fb)
+    assert store_a.merge_listeners == []  # unsubscribed from the old store
+    assert len(store_b.merge_listeners) == 1
+    # old store's merges no longer touch the (new) cache
+    rng = np.random.default_rng(3)
+    store_a.merge(spec, make_frame(rng, 20, 12, 300), 5_000)
+    assert front.cache.invalidations == 0
+
+
+# -- FeatureStore integration -------------------------------------------------
+
+
+def test_featurestore_default_front_is_passthrough():
+    """The default FeatureStore serving config must not change GET semantics:
+    no cache, no admission control — byte-identical to OnlineStore.lookup."""
+    from repro.core.featurestore import FeatureStore
+
+    fs = FeatureStore("serve-pt")
+    assert fs.serving.config.cache_capacity == 0
+    assert fs.serving.config.deadline_ms is None
+    spec = make_spec(ttl=100)
+    fs.registry.create_entity(spec.entity)
+    fs._sources["src"] = None  # direct-merge path; no scheduler involved
+    fs.create_feature_set(spec)
+    rng = np.random.default_rng(0)
+    fs.online.merge(spec, make_frame(rng, 80, 40, 50), 1_000)
+    fs.advance_clock(1_060)
+    ids = [np.arange(30, dtype=np.int64)]
+    for use_kernel in (False, True):
+        v, f = fs.get_online_features("fs", 1, ids, use_kernel=use_kernel)
+        vr, fr = fs.online.lookup(
+            "fs", 1, ids, now=fs.clock(), use_kernel=use_kernel
+        )
+        np.testing.assert_array_equal(f, fr)
+        np.testing.assert_array_equal(v, vr)
+    snap = fs.monitor.system.snapshot()
+    assert snap["histograms"]["serving/kernel_us"]["n"] >= 1  # stages observed
+
+
+def test_featurestore_with_serving_config_caches():
+    from repro.core.featurestore import FeatureStore
+
+    fs = FeatureStore("serve-cache", serving=ServingConfig(cache_capacity=256))
+    spec = make_spec()
+    fs.registry.create_entity(spec.entity)
+    fs._sources["src"] = None
+    fs.create_feature_set(spec)
+    rng = np.random.default_rng(0)
+    fs.online.merge(spec, make_frame(rng, 80, 40, 50), 1_000)
+    ids = [np.arange(30, dtype=np.int64)]
+    v1, f1 = fs.get_online_features("fs", 1, ids, use_kernel=False)
+    v2, f2 = fs.get_online_features("fs", 1, ids, use_kernel=False)
+    np.testing.assert_array_equal(v1, v2)
+    np.testing.assert_array_equal(f1, f2)
+    assert fs.serving.stats()["cache_fastpath"] >= 1
+    # materializer merges flow through merge_listeners -> invalidation works
+    fs.online.merge(spec, make_frame(rng, 40, 40, 90), 2_000)
+    v3, _ = fs.get_online_features("fs", 1, ids, use_kernel=False)
+    vr, _ = fs.online.lookup("fs", 1, ids, now=fs.clock(), use_kernel=False)
+    np.testing.assert_array_equal(v3, vr)
+
+
+# -- retrace churn (satellite a) ----------------------------------------------
+
+
+def test_pow2_bucket_rule():
+    assert lookup_ops.pow2_bucket(1) == 128  # floor
+    assert lookup_ops.pow2_bucket(128) == 128
+    assert lookup_ops.pow2_bucket(129) == 256
+    assert lookup_ops.pow2_bucket(1_500) == 2_048
+    assert lookup_ops.pow2_bucket(2_048) == 2_048
+    assert lookup_ops.pow2_bucket(2_049) == 4_096
+    # the store's _bucket IS this rule (one bucketing policy, not two)
+    from repro.core import online_store
+
+    assert online_store._bucket is lookup_ops.pow2_bucket
+
+
+def test_kernel_get_compile_count_stable_across_batch_jitter():
+    """Request-size jitter within one pow2 bucket reuses the SAME compiled
+    kernel entry: after a warm-up GET, repeated kernel GETs with varying
+    batch sizes must not grow either jit cache (the retrace-churn fix —
+    the old next-multiple-of-128 padding re-traced per high-water mark)."""
+    spec = make_spec(n_feats=1)
+    store = OnlineStore(num_partitions=16, merge_engine="vector")
+    rng = np.random.default_rng(0)
+    # one merge only: capacity must not change between GETs
+    frame = make_frame(rng, 6_000, 1 << 40, 100, n_feats=1)
+    store.merge(spec, frame, 1_000)
+
+    def get(seed, b):
+        r = np.random.default_rng(seed)
+        ids = [r.integers(0, 1 << 40, b).astype(np.int64)]
+        store.lookup("fs", 1, ids, now=1_050, use_kernel=True)
+
+    get(0, 5_700)  # warm-up: compiles this bucket once
+    c_lookup = lookup_ops.lookup._cache_size()
+    c_gather = lookup_ops.gather_rows._cache_size()
+    # b in [5400, 6000]: routed qmax jitters run-to-run (mean ~356, sd ~18)
+    # but stays inside the (256, 512] pow2 bucket; gather stays in 8192
+    for seed, b in enumerate((5_400, 5_550, 5_700, 5_850, 6_000), start=1):
+        get(seed, b)
+        assert lookup_ops.lookup._cache_size() == c_lookup, (seed, b)
+        assert lookup_ops.gather_rows._cache_size() == c_gather, (seed, b)
+
+
+# -- monitoring wiring --------------------------------------------------------
+
+
+def test_per_stage_histograms_populated():
+    store, _ = seeded_store()
+    mon = HealthMonitor()
+    front = ServingFront(
+        store, config=ServingConfig(cache_capacity=32), monitor=mon
+    )
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        front.get(
+            "fs",
+            1,
+            [rng.integers(0, 40, 16).astype(np.int64)],
+            now=1_100,
+            engine="host",
+        )
+    snap = mon.system.snapshot()
+    for stage in ("queue_wait", "assembly", "kernel", "decode", "request"):
+        h = snap["histograms"][f"serving/{stage}_us"]
+        assert h["n"] >= 1, stage
+        assert h["p50"] >= 0 and h["p99"] >= h["p50"] * (1 - 1e-9), stage
+    assert mon.system.counters["serving/requests"] == 4
