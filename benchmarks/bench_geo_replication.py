@@ -18,13 +18,23 @@ core/replication.py:
     cross-region access (home store + WAN penalty) vs a local replica read
     (replica store + local link): measured store wall time + modeled link;
   * FAILOVER — wall time to replay an un-acked two-plane suffix when
-    promoting the nearest healthy replica, and the replayed rows/s.
+    promoting the nearest healthy replica, and the replayed rows/s;
+  * CHAOS CONVERGENCE (ISSUE 7) — the same two-plane workload pushed
+    through a ``FaultyChannel`` that drops 10% of frames (plus dup /
+    reorder / corrupt / ack-loss / latency-spike at lower rates) on a
+    seeded deterministic schedule: drain rounds to convergence, the retry
+    amplification the at-least-once transport pays, the fault ledger the
+    delivery state machine kept, and goodput (unique rows landed per
+    wall-second, retries included in the cost).  A partition sub-scenario
+    walks one replica HEALTHY -> SUSPECT -> DEAD (driving
+    ``topology.mark_down``) and back up via probe recovery.
 
-The throughput section runs the SAME fixed workload in --fast mode: its
-shipped-byte counts are a deterministic function of the workload (seeded
-rng + idempotent merges), which is what lets benchmarks/check_regression.py
-gate them EXACTLY against the committed BENCH_geo_replication.json on every
-CI run.
+The throughput and chaos sections run the SAME fixed workloads in --fast
+mode: their shipped-byte / retry / fault counts are deterministic
+functions of the workload (seeded rng + idempotent merges + seeded fault
+schedule over logical drain ticks), which is what lets
+benchmarks/check_regression.py gate them EXACTLY against the committed
+BENCH_geo_replication.json on every CI run.
 """
 
 from __future__ import annotations
@@ -43,8 +53,9 @@ from repro.core.dsl import UDFTransform
 from repro.core.offline_store import OfflineStore
 from repro.core.online_store import OnlineStore
 from repro.core import wire
+from repro.core.channel import FaultPlan, FaultyChannel
 from repro.core.regions import GeoTopology, Region
-from repro.core.replication import GeoReplicator, ReplicationLog
+from repro.core.replication import DeliveryPolicy, GeoReplicator, ReplicationLog
 from repro.core.table import Table
 
 REGIONS = ("westus2", "eastus", "westeurope")
@@ -289,14 +300,166 @@ def bench_failover_replay(
     }
 
 
+CHAOS_RATES = {
+    "drop": 0.10,
+    "dup": 0.05,
+    "reorder": 0.05,
+    "corrupt": 0.05,
+    "ack_loss": 0.03,
+    "spike": 0.02,
+}
+
+
+def _chaos_partition() -> dict:
+    """Partition sub-scenario: one replica behind a transmit-event window
+    that eats everything (frames AND probes).  The delivery state machine
+    must walk HEALTHY -> SUSPECT -> DEAD, drive ``topology.mark_down``,
+    keep probing on its schedule, and recover + converge once the window
+    passes — all on logical drain ticks, so every field is deterministic."""
+    spec = _spec()
+    topo = _topo()
+    channel = FaultyChannel(
+        FaultPlan(seed=11, partitions=(("eastus", 0, 10),)), topo
+    )
+    policy = DeliveryPolicy(
+        suspect_after=2, dead_after=4, backoff_base=1, backoff_cap=2,
+        probe_interval=1,
+    )
+    home = OnlineStore()
+    log = ReplicationLog()
+    repl = GeoReplicator(
+        home, topology=topo, home_region="westus2", log=log,
+        channel=channel, policy=policy,
+    )
+    replica = OnlineStore()
+    repl.add_replica("eastus", replica)
+
+    rng = np.random.default_rng(17)
+    home.merge(spec, _frame(rng, 2_000, 1_000, 10**6), 10**8)
+    st = repl.delivery["eastus"]
+    dead_at_round = None
+    marked_down_at_dead = False
+    rounds = 0
+    while log.pending_count("eastus") > 0:
+        rounds += 1
+        if rounds > 200:
+            raise RuntimeError("partition scenario did not converge")
+        repl.drain("eastus")
+        if dead_at_round is None and st.status == "dead":
+            dead_at_round = rounds
+            marked_down_at_dead = not topo.regions["eastus"].healthy
+    _assert_identical(home, replica, spec)
+    return {
+        "partition_events": 10,
+        "rounds_to_converge": rounds,
+        "dead_at_round": dead_at_round,
+        "detection_marked_region_down": marked_down_at_dead,
+        "probes": st.probes,
+        "timeouts": st.timeouts,
+        "transitions": [f"{a}->{b}" for _, a, b in st.transitions],
+        "recovered": st.status == "healthy" and topo.regions["eastus"].healthy,
+        "converged_identical": True,
+    }
+
+
+def bench_chaos_convergence(
+    window_rows: int = 20_000, batches: int = 10, entities: int = 10_000
+) -> dict:
+    """Two-plane replication through a lossy WAN: 10% frame drop plus
+    lower-rate duplicate / reorder / corrupt / ack-loss / spike faults on a
+    seeded schedule.  Drains until the replica's cursor reaches the head,
+    then verifies both planes byte-identical — convergence is ASSERTED, not
+    assumed.  Every count here (rounds, retries, timeouts, fault ledger,
+    channel injections) is a pure function of (workload seed, fault seed,
+    logical drain ticks), so check_regression.py gates them EXACTLY; only
+    ``goodput_rows_per_s`` is wall-clock (gated within tolerance)."""
+    spec = _spec()
+    topo = _topo()
+    # seed 8 strikes every fault kind at least once within the run's
+    # transmit-event horizon, so each ledger counter gets a nonzero gate
+    plan = FaultPlan(
+        seed=8,
+        drop_rate=CHAOS_RATES["drop"],
+        dup_rate=CHAOS_RATES["dup"],
+        reorder_rate=CHAOS_RATES["reorder"],
+        corrupt_rate=CHAOS_RATES["corrupt"],
+        ack_loss_rate=CHAOS_RATES["ack_loss"],
+        spike_rate=CHAOS_RATES["spike"],
+    )
+    channel = FaultyChannel(plan, topo)
+    # small backoff cap so convergence doesn't idle through deferred ticks
+    policy = DeliveryPolicy(
+        suspect_after=2, dead_after=5, backoff_base=1, backoff_cap=4,
+        probe_interval=2,
+    )
+    home = OnlineStore()
+    home_off = OfflineStore()
+    log = ReplicationLog(capacity=8 * batches)
+    repl = GeoReplicator(
+        home, topology=topo, home_region="westus2", home_offline=home_off,
+        log=log, channel=channel, policy=policy,
+    )
+    replica = OnlineStore()
+    replica_off = OfflineStore()
+    repl.add_replica("eastus", replica, replica_off)
+
+    rng = np.random.default_rng(7)
+    per_batch = window_rows // batches
+    for i in range(batches):
+        f = _frame(rng, per_batch, entities, 10**6 * (i + 1))
+        home.merge(spec, f, 10**8 + i)
+        home_off.merge(spec, f, 2 * 10**8 + i)
+    pending = log.lag("eastus")
+
+    rounds = 0
+    t0 = time.perf_counter()
+    while log.pending_count("eastus") > 0:
+        rounds += 1
+        if rounds > 400:
+            raise RuntimeError("chaos workload did not converge in 400 rounds")
+        repl.drain("eastus")
+    wall = time.perf_counter() - t0
+    _assert_identical(home, replica, spec)
+    _assert_offline_identical(home_off, replica_off, spec)
+
+    st = repl.delivery["eastus"]
+    ship = repl.shipped["eastus"]
+    unique_batches = pending["batches"]
+    return {
+        "seed": plan.seed,
+        "fault_rates": dict(CHAOS_RATES),
+        "window_rows": window_rows,
+        "unique_rows": pending["rows"],
+        "unique_batches": unique_batches,
+        "drain_rounds": rounds,
+        "retried_batches": st.retries,
+        "timeouts": st.timeouts,
+        "corrupt_frames": st.corrupt_frames,
+        "redelivered_batches": st.redelivered_batches,
+        "channel_counts": dict(channel.counts),
+        "applied_batches": ship["batches"],
+        # at-least-once redundancy cost: batches applied (incl. redeliveries)
+        # per unique logged batch, and wire bytes per unique payload byte
+        "retry_amplification_x": round(
+            ship["batches"] / max(unique_batches, 1), 3
+        ),
+        "shipped_bytes": ship["bytes"],
+        "goodput_rows_per_s": int(pending["rows"] / max(wall, 1e-9)),
+        "converged_identical": True,
+        "partition": _chaos_partition(),
+    }
+
+
 def run(fast: bool = False) -> dict:
-    # throughput keeps its full deterministic workload even in --fast (it is
-    # sub-second): check_regression.py gates its shipped-byte counts EXACTLY
-    # against the committed artifact, so the shapes must match the baseline
+    # throughput and chaos keep their full deterministic workloads even in
+    # --fast (both are sub-second): check_regression.py gates their
+    # shipped-byte / retry / fault counts EXACTLY against the committed
+    # artifact, so the shapes must match the baseline
     return {
         "throughput": bench_replication_throughput(),
         "read_latency": bench_read_latency(rounds=10 if fast else 30),
         "failover": bench_failover_replay(suffix_rows=10_000 if fast else 50_000),
+        "chaos": bench_chaos_convergence(),
     }
 
 

@@ -24,6 +24,21 @@ artifacts ``BENCH_online_store.json``, ``BENCH_geo_replication.json`` and
   everywhere we run; a wire-byte mismatch with identical raw bytes means
   the compression layer changed, not the workload.
 
+* CHAOS CONVERGENCE (deterministic + calibrated, ISSUE 7): the chaos
+  section of the geo bench pushes the same two-plane workload through a
+  seeded ``FaultyChannel`` (10% drop + lower-rate dup/reorder/corrupt/
+  ack-loss/spike) and a logical-tick delivery state machine, so every
+  count it reports — drain rounds, retried batches, timeouts, CRC-rejected
+  frames, redeliveries, per-kind channel injections, retry amplification,
+  shipped bytes — is a pure function of the two seeds and must match the
+  committed baseline EXACTLY; a drift means the fault schedule, backoff
+  policy, or retry semantics changed and the artifact must be re-committed
+  deliberately.  The convergence/recovery booleans (both planes
+  byte-identical after the faults; the partition scenario's DEAD detection
+  drove ``topology.mark_down`` and probe recovery brought the link back)
+  are re-asserted fresh on every run.  Only ``goodput_rows_per_s`` is
+  wall-clock, gated within the calibrated tolerance.
+
 * MERGE / APPLY THROUGHPUT (tolerance + calibration): rows/s is machine-
   and load-dependent, so the committed baseline is first rescaled by how
   fast THIS run's ``loop`` reference engine is relative to the baseline's
@@ -158,6 +173,50 @@ def check_geo_replication(
             failures.append(f"geo {field} is no longer asserted true")
 
 
+def check_chaos(
+    cur: dict, base: dict, tolerance: float, scale: float, failures: list[str]
+) -> None:
+    """Chaos-convergence gates (ISSUE 7).  Everything the fault-injected
+    drain loop counts is seeded + logical-tick deterministic, so it is
+    gated EXACTLY; the convergence/recovery booleans are re-asserted
+    fresh; only goodput is wall-clock (calibrated tolerance)."""
+    c, b = cur["chaos"], base["chaos"]
+    for field in ("converged_identical",):
+        if not c.get(field):
+            failures.append(f"chaos {field} is no longer asserted true")
+    for field in ("recovered", "detection_marked_region_down"):
+        if not c["partition"].get(field):
+            failures.append(f"chaos partition {field} is no longer asserted true")
+    drift = [
+        k
+        for k in b
+        if k not in ("goodput_rows_per_s",) and c.get(k) != b[k]
+    ]
+    if drift:
+        for k in drift:
+            failures.append(
+                f"chaos {k} drifted: {c.get(k)} vs committed {b[k]} "
+                f"(seeded + logical ticks — re-commit "
+                f"BENCH_geo_replication.json if intentional)"
+            )
+    else:
+        print(
+            f"  ok: chaos deterministic ledger exact (rounds "
+            f"{c['drain_rounds']}, retries {c['retried_batches']}, "
+            f"timeouts {c['timeouts']}, corrupt {c['corrupt_frames']}, "
+            f"amplification {c['retry_amplification_x']}x; partition dead@"
+            f"{c['partition']['dead_at_round']} -> recovered)"
+        )
+    got = c["goodput_rows_per_s"]
+    floor = int(b["goodput_rows_per_s"] * scale * (1.0 - tolerance))
+    if got < floor:
+        failures.append(
+            f"chaos goodput dropped >{tolerance:.0%}: {got} rows/s vs {floor}"
+        )
+    else:
+        print(f"  ok: chaos goodput {got} rows/s (calibrated floor {floor})")
+
+
 def check_serving(
     cur: dict, base: dict, tolerance: float, scale: float, failures: list[str]
 ) -> None:
@@ -269,6 +328,7 @@ def main() -> None:
         geo_cur = load_suite_result(Path(args.current), "geo_replication")
         geo_base = load_suite_result(Path(args.geo_baseline), "geo_replication")
         check_geo_replication(geo_cur, geo_base, args.tolerance, scale, failures)
+        check_chaos(geo_cur, geo_base, args.tolerance, scale, failures)
     if args.serving_baseline:
         srv_cur = load_suite_result(Path(args.current), "serving")
         srv_base = load_suite_result(Path(args.serving_baseline), "serving")

@@ -118,7 +118,7 @@ def main() -> None:
     )
     write_artifact(
         "geo_replication", "BENCH_geo_replication.json",
-        ("throughput", "read_latency", "failover"),
+        ("throughput", "read_latency", "failover", "chaos"),
     )
     write_artifact(
         "serving", "BENCH_serving.json",

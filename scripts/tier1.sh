@@ -9,13 +9,15 @@
 # smoke runs the online-store + geo-replication + serving suites —
 # bench_online_store raises on a transfer regression (table-sized
 # host<->device traffic on the serving path), bench_geo_replication asserts
-# replica convergence on both planes, bench_serving asserts the coalesced
-# kernel GET stays within 2x of host and stale reads stay inside the bound —
-# and benchmarks/check_regression.py gates the fresh numbers against the
+# replica convergence on both planes INCLUDING its chaos phase (the same
+# workload through a seeded lossy FaultyChannel must still converge
+# byte-identical), bench_serving asserts the coalesced kernel GET stays
+# within 2x of host and stale reads stay inside the bound — and
+# benchmarks/check_regression.py gates the fresh numbers against the
 # committed BENCH_online_store.json + BENCH_geo_replication.json +
-# BENCH_serving.json trajectory artifacts (transfer/shipped bytes and cache
-# hit rate exactly; merge/replica-apply/serving throughput within a
-# machine-calibrated 30%).
+# BENCH_serving.json trajectory artifacts (transfer/shipped bytes, cache
+# hit rate, and the chaos retry/fault ledger exactly; merge/replica-apply/
+# serving/chaos-goodput throughput within a machine-calibrated 30%).
 # CI (.github/workflows/ci.yml) runs this same script, so a regression
 # fails tier-1 locally and the workflow identically.
 # Set TIER1_SKIP_BENCH=1 to run tests only.

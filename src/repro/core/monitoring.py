@@ -229,6 +229,29 @@ class HealthMonitor:
             self.system.inc(f"replication/shipped_bytes/{plane}", wire_nbytes)
             self.system.inc(f"replication/shipped_raw_bytes/{plane}", raw_nbytes)
 
+    def record_delivery_state(self, replica: str, state: str, code: int) -> None:
+        """The delivery state machine's verdict on one replica link:
+        HEALTHY(0) / SUSPECT(1) / DEAD(2).  The gauge is the current state
+        code; the counter tallies transitions so a flapping link is visible
+        even when the gauge reads healthy at scrape time."""
+        self.system.set_gauge(f"replication/state/{replica}", float(code))
+        self.system.inc(f"replication/state_transitions/{replica}")
+
+    def record_delivery_retry(self, replica: str, batches: int) -> None:
+        """Batches re-shipped to a replica after an earlier transmit went
+        un-acked (timeout, drop, corruption) — the at-least-once transport's
+        redundancy cost, a.k.a. retry amplification."""
+        self.system.inc("replication/retries", batches)
+        self.system.inc(f"replication/retries/{replica}", batches)
+
+    def record_delivery_fault(self, replica: str, kind: str, n: int = 1) -> None:
+        """One detected delivery fault on a replica link: ``timeout`` (no
+        ack back in time), ``corrupt_frame`` (wire CRC rejected an arrival),
+        or ``redelivered`` (an already-acked batch arrived again and was
+        absorbed by per-seq dedup)."""
+        self.system.inc(f"replication/{kind}", n)
+        self.system.inc(f"replication/{kind}/{replica}", n)
+
     def clear_replica_gauges(self, replica: str) -> None:
         """Drop every per-replica replication gauge when the replica leaves
         the serving set (drop, failover promotion, dead ex-home).  Gauges

@@ -103,6 +103,16 @@ class GeoTopology:
             return 0.0
         return self.latency(src, dst) + nbytes * 8 / (self.cross_region_gbps * 1e6)
 
+    # -- health ----------------------------------------------------------------
+    # Health lives on the topology so DETECTED failure (the delivery state
+    # machine's DEAD transition, core/replication.py) and operator flips
+    # (GeoPlacement.mark_down) drive the same flag read routing checks.
+    def mark_down(self, region: str) -> None:
+        self.regions[region].healthy = False
+
+    def mark_up(self, region: str) -> None:
+        self.regions[region].healthy = True
+
 
 class GeoPlacement:
     """Placement + replication + fail-over for one feature store's assets."""
@@ -171,10 +181,10 @@ class GeoPlacement:
 
     # -- failure handling (§3.1.2: cross-region resources for HA) ---------------
     def mark_down(self, region: str) -> None:
-        self.topology.regions[region].healthy = False
+        self.topology.mark_down(region)
 
     def mark_up(self, region: str) -> None:
-        self.topology.regions[region].healthy = True
+        self.topology.mark_up(region)
 
     def failover(self) -> Optional[str]:
         """If the home region is down, promote the nearest healthy replica to

@@ -49,6 +49,40 @@ raw payload and post-compression wire size — and ``topology.transfer_ms``
 prices the wire size, making the per-plane shipped-bytes benchmarks true
 transport measurements rather than array-size estimates.
 
+Failure model (delivery state machine, core/channel.py)
+-------------------------------------------------------
+The hop under ``_ship_frame`` is a pluggable ``Channel``:
+``InProcessChannel`` (the default) is perfect and keeps every
+deterministic gate unchanged; ``FaultyChannel`` drops, duplicates,
+reorders, corrupts, delays, and partitions frames on a seeded
+deterministic schedule.  Against either, delivery is AT-LEAST-ONCE:
+
+  * a frame's batches are acked per-seq only after the replica decodes
+    (wire CRC verified) and applies them AND the ack path returns inside
+    ``DeliveryPolicy.ack_timeout_ms`` — anything else (drop, partition,
+    corruption, lost/late ack) leaves them pending for redelivery;
+  * redelivery is EXACTLY-ONCE IN EFFECT: the online plane's latest-wins
+    merge on (event_ts, creation_ts) and the offline plane's full-key
+    insert-if-absent make re-applying a batch a no-op, and
+    ``ReplicationLog.is_acked`` per-seq dedup counts (never re-acks) a
+    batch that arrives again;
+  * each replica link runs a per-replica ``DeliveryState``: after a
+    failed drain the link backs off for ``min(cap, base << n-1)`` drain
+    ticks plus deterministic per-(replica, n) jitter; after
+    ``suspect_after`` consecutive failures the link is SUSPECT, after
+    ``dead_after`` it is DEAD — which drives ``topology.mark_down``, so
+    read routing and ``failover()`` react to DETECTED failure, not
+    manual flips;
+  * a DEAD link is re-probed every ``probe_interval`` ticks with a
+    zero-batch probe frame; the first success flips it back HEALTHY
+    (``topology.mark_up``) and normal draining resumes — or, past
+    ``evict_after`` failures, the replica is evicted entirely and
+    re-admitted later through the ``rejoin``/delta-bootstrap path
+    (``GeoFeatureStore.drain`` auto-probes evicted regions);
+  * transfers that MUST complete (bootstrap chunks, promotion replay)
+    retry against the channel a bounded number of times and raise
+    ``DeliveryError`` when the budget is exhausted — never silent loss.
+
 Log / cursor / replay protocol
 ------------------------------
 ``ReplicationLog`` is a bounded, totally-ordered sequence of reduced
@@ -111,12 +145,14 @@ new primary without skew.  Geo-fenced home regions refuse replication
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from collections import deque
 from typing import Callable, Optional
 
 import numpy as np
 
 from repro.core.assets import FeatureSetSpec
+from repro.core.channel import Channel, DeliveryError, InProcessChannel, mix64
 from repro.core.featurestore import FeatureStore
 from repro.core.offline_store import CREATION_TS, EVENT_TS, OfflineStore
 from repro.core.online_store import OnlineStore
@@ -124,6 +160,10 @@ from repro.core.regions import GeoTopology, RegionDownError, ReplicationPolicy
 
 __all__ = [
     "DEFAULT_COMPRESS_LEVEL",
+    "STATE_CODES",
+    "DeliveryError",
+    "DeliveryPolicy",
+    "DeliveryState",
     "GeoFeatureStore",
     "GeoReplicator",
     "ReplicatedBatch",
@@ -144,6 +184,67 @@ DEFAULT_COMPRESS_LEVEL = 1
 class ReplicationLogFull(RuntimeError):
     """The log hit capacity and no fully-acknowledged prefix can be
     truncated — backpressure instead of dropping un-acked batches."""
+
+
+#: delivery-state gauge encoding (``replication/state/{replica}``)
+STATE_CODES = {"healthy": 0, "suspect": 1, "dead": 2}
+
+
+@dataclasses.dataclass(frozen=True)
+class DeliveryPolicy:
+    """Knobs of the per-replica delivery state machine.
+
+    Time is LOGICAL — drain ticks, not wall-clock — so every threshold is
+    deterministic and the chaos suite can gate retry counts exactly.
+    ``ack_timeout_ms`` is the one model-time knob: a delivery whose modeled
+    latency exceeds it (WAN spike) counts as un-acked even though the
+    bytes eventually land, and the replica-side per-seq dedup absorbs the
+    resulting redelivery."""
+
+    #: modeled one-way latency above which a delivery counts as un-acked
+    ack_timeout_ms: float = 5_000.0
+    #: consecutive failures before HEALTHY -> SUSPECT
+    suspect_after: int = 2
+    #: consecutive failures before -> DEAD (drives topology.mark_down)
+    dead_after: int = 5
+    #: backoff after the n-th consecutive failure, in drain ticks:
+    #: min(backoff_cap, backoff_base << (n-1)) + deterministic jitter
+    backoff_base: int = 1
+    backoff_cap: int = 16
+    #: drain ticks between re-probes of a DEAD link
+    probe_interval: int = 4
+    #: extra attempts per bootstrap chunk before DeliveryError
+    bootstrap_retries: int = 10
+    #: forced drain rounds a promotion replay may take before DeliveryError
+    promote_rounds: int = 64
+    #: consecutive failures before the replica is dropped from the set
+    #: entirely (None = never; re-admission goes through rejoin/bootstrap)
+    evict_after: Optional[int] = None
+
+
+@dataclasses.dataclass
+class DeliveryState:
+    """What the publisher knows about one replica link — detected health,
+    backoff schedule, and the fault ledger the chaos gates read."""
+
+    status: str = "healthy"
+    #: logical clock: +1 per drain pass over this replica
+    tick: int = 0
+    consecutive_failures: int = 0
+    #: drains are deferred while tick < backoff_until
+    backoff_until: int = 0
+    #: next tick a DEAD link gets a probe frame
+    next_probe_tick: int = 0
+    retries: int = 0  # batches re-shipped after going un-acked
+    timeouts: int = 0  # deliveries with no usable ack
+    corrupt_frames: int = 0  # arrivals the wire CRC rejected
+    redelivered_batches: int = 0  # already-acked batches that arrived again
+    bootstrap_retries: int = 0
+    probes: int = 0
+    #: highest non-bootstrap seq ever transmitted (retry detection)
+    max_seq_sent: int = -1
+    #: (tick, from_status, to_status) history
+    transitions: list[tuple[int, str, str]] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -312,6 +413,13 @@ class ReplicationLog:
             ahead.remove(self.cursors[replica])
             self.cursors[replica] += 1
 
+    def is_acked(self, replica: str, seq: int) -> bool:
+        """Has this replica already acknowledged ``seq``?  Redelivery
+        detection for the at-least-once transport: an acked batch arriving
+        again is absorbed by per-plane idempotence and counted — never
+        re-acked into cursor state."""
+        return seq < self.cursors[replica] or seq in self._acked_ahead[replica]
+
     def truncate(self) -> int:
         """Drop the prefix every replica has acknowledged.  Never touches a
         batch at or above any cursor, so un-acked batches survive.  Returns
@@ -358,7 +466,17 @@ class GeoReplicator:
     side, apply only the decoded copy.  Adjacent same-plane same-table
     pending batches coalesce into one frame per ``drain``; shipping
     accounting records MEASURED raw and post-compression wire bytes, and
-    the topology's bandwidth model prices the compressed size."""
+    the topology's bandwidth model prices the compressed size.
+
+    The hop itself is a pluggable ``Channel`` and each replica link runs
+    the ``DeliveryPolicy``/``DeliveryState`` machine documented in the
+    module docstring's failure-model section: at-least-once transmission
+    with ack-timeout detection, capped exponential backoff, automatic
+    SUSPECT/DEAD health driving ``topology.mark_down``, probe-based
+    recovery, and optional eviction.  ``on_evict`` (if given) is called
+    with the region name after an evicted replica's state is torn down —
+    the control-plane hook ``GeoFeatureStore`` uses to drop placement and
+    queue an auto-rejoin."""
 
     def __init__(
         self,
@@ -371,6 +489,9 @@ class GeoReplicator:
         clock: Optional[Callable[[], int]] = None,
         monitor=None,
         compress_level: Optional[int] = DEFAULT_COMPRESS_LEVEL,
+        channel: Optional[Channel] = None,
+        policy: Optional[DeliveryPolicy] = None,
+        on_evict: Optional[Callable[[str], None]] = None,
     ) -> None:
         self.topology = topology
         self.home_region = home_region
@@ -378,6 +499,12 @@ class GeoReplicator:
         self.clock = clock or (lambda: 0)
         self.monitor = monitor
         self.compress_level = compress_level
+        self.channel: Channel = (
+            channel if channel is not None else InProcessChannel(topology)
+        )
+        self.policy = policy if policy is not None else DeliveryPolicy()
+        self.on_evict = on_evict
+        self.delivery: dict[str, DeliveryState] = {}
         self.stores: dict[str, OnlineStore] = {home_region: home_store}
         # offline plane is optional: a standalone online-only replicator
         # (benchmarks, tests) never publishes offline batches
@@ -492,6 +619,7 @@ class GeoReplicator:
         if offline_store is not None:
             self.offline_stores[region] = offline_store
         cut = self.log.register_replica(region)
+        self.delivery[region] = DeliveryState()
         # "bytes" is the TRUE wire size (post-compression frame bytes, the
         # size the WAN bandwidth model prices); "raw_bytes" the serialized
         # payload before compression; "frames" counts wire messages (a
@@ -554,12 +682,7 @@ class GeoReplicator:
                             event_ts=event_ts[sl],
                             values=values[sl],
                         )
-                        self._ship_frame(
-                            region,
-                            wire.encode_batch(
-                                batch, compress_level=self.compress_level
-                            ),
-                        )
+                        self._ship_bootstrap(region, batch)
                         out["online_rows"] += len(sl)
                         out["chunks"] += 1
         home_offline = self.offline_stores.get(self.home_region)
@@ -592,73 +715,153 @@ class GeoReplicator:
                     plane="offline",
                     columns=cols,
                 )
-                self._ship_frame(
-                    region,
-                    wire.encode_batch(batch, compress_level=self.compress_level),
-                )
+                self._ship_bootstrap(region, batch)
                 out["offline_rows"] += len(chunk)
                 out["chunks"] += 1
         return out
 
+    def _ship_bootstrap(self, region: str, batch: ReplicatedBatch) -> None:
+        """Ship one bootstrap chunk, retrying against the channel: a chunk
+        is not a log entry (seq = BOOTSTRAP_SEQ, never acked), so a lost
+        one would be lost FOREVER rather than redelivered by the normal
+        drain — the stream must therefore push through transient faults or
+        fail loudly.  Re-application of a chunk that actually landed is a
+        no-op (per-plane idempotence), so blind retry is safe."""
+        frame = wire.encode_batch(batch, compress_level=self.compress_level)
+        st = self.delivery[region]
+        for attempt in range(self.policy.bootstrap_retries + 1):
+            if attempt:
+                st.bootstrap_retries += 1
+            if self._ship_frame(region, frame) is not None:
+                return
+        raise DeliveryError(
+            f"bootstrap chunk for {region} undeliverable after "
+            f"{self.policy.bootstrap_retries + 1} attempts"
+        )
+
     # -- apply (replica side) -------------------------------------------------
-    def _ship_frame(self, region: str, frame) -> list[dict]:
-        """The WAN hop: hand a replica one encoded ``wire.WireFrame``, which
-        it decodes and applies batch by batch (acking each logged seq).  The
-        replica only ever touches the DECODED copies — read-only views of
-        the received buffer, never the home store's live arrays — and the
-        shipping ledger records the frame's measured raw + wire bytes, with
-        ``topology.transfer_ms`` pricing the compressed size."""
-        stats = []
-        for batch in wire.decode_frame(frame.data):
-            spec = self._specs[batch.table]
-            if batch.plane == "offline":
-                cols = dict(batch.columns or {})
-                creation = cols.pop(CREATION_TS, batch.creation_ts)
-                st = self.offline_stores[region].apply_chunks(
-                    spec, batch.keys, batch.event_ts, creation, cols
-                )
-            else:
-                st = self.stores[region].merge_reduced(
-                    spec, batch.keys, batch.event_ts, batch.values, batch.creation_ts
-                )
-            if batch.seq != wire.BOOTSTRAP_SEQ:
-                self.log.ack(region, batch.seq)
-            stats.append(st)
+    def _apply_decoded(self, region: str, batch: ReplicatedBatch) -> dict:
+        """Apply ONE decoded batch to the replica's store for its plane.
+        Both applies are idempotent (latest-wins online, full-key
+        insert-if-absent offline), which is what makes the at-least-once
+        channel exactly-once in effect."""
+        spec = self._specs[batch.table]
+        if batch.plane == "offline":
+            cols = dict(batch.columns or {})
+            creation = cols.pop(CREATION_TS, batch.creation_ts)
+            return self.offline_stores[region].apply_chunks(
+                spec, batch.keys, batch.event_ts, creation, cols
+            )
+        return self.stores[region].merge_reduced(
+            spec, batch.keys, batch.event_ts, batch.values, batch.creation_ts
+        )
+
+    def _ship_frame(self, region: str, frame) -> Optional[list[dict]]:
+        """The WAN hop: transmit one encoded ``wire.WireFrame`` over the
+        channel, decode and apply every payload that arrives, and ack each
+        applied logged seq IF the acknowledgement made it back in time.
+        Returns the per-batch apply stats, or None when the delivery
+        failed (nothing decodable arrived, or the ack was lost/late) — the
+        caller's cue to back off and retry; un-acked batches stay pending.
+
+        Accounting is split by side and is exception-safe: the TRANSMIT
+        ledger (frames/bytes/ms) is charged up front — the home pays for
+        the send whether or not it lands, so retries show up as byte
+        amplification — while the APPLY ledger (batches/rows) is recorded
+        in a ``finally`` per batch actually applied, so a replica-side
+        apply error mid-frame still accounts the earlier batches it acked
+        before the exception propagates."""
+        st = self.delivery[region]
+        delivery = self.channel.transmit(self.home_region, region, frame)
         ship = self.shipped[region]
         ship["frames"] += 1
-        ship["batches"] += len(stats)
-        ship["rows"] += frame.rows
         ship["bytes"] += frame.wire_nbytes
         ship["raw_bytes"] += frame.raw_nbytes
-        ship["ms"] += self.topology.transfer_ms(
-            self.home_region, region, frame.wire_nbytes
-        )
+        ship["ms"] += delivery.latency_ms
         plane = ship["by_plane"][frame.plane]
         plane["frames"] += 1
-        plane["batches"] += len(stats)
-        plane["rows"] += frame.rows
         plane["bytes"] += frame.wire_nbytes
         plane["raw_bytes"] += frame.raw_nbytes
-        if self.monitor is not None:
-            self.monitor.record_replication_ship(
-                frame.rows,
-                batches=len(stats),
-                raw_nbytes=frame.raw_nbytes,
-                wire_nbytes=frame.wire_nbytes,
-                plane=frame.plane,
-            )
-        return stats
+        resent = sum(
+            1
+            for s in frame.seqs
+            if s != wire.BOOTSTRAP_SEQ and s <= st.max_seq_sent
+        )
+        if resent:
+            st.retries += resent
+            if self.monitor is not None:
+                self.monitor.record_delivery_retry(region, resent)
+        for s in frame.seqs:
+            if s != wire.BOOTSTRAP_SEQ and s > st.max_seq_sent:
+                st.max_seq_sent = s
+        ack_ok = (
+            not delivery.ack_lost
+            and delivery.latency_ms <= self.policy.ack_timeout_ms
+        )
+        applied: list[dict] = []
+        applied_rows = 0
+        decoded_any = False
+        try:
+            for payload in delivery.arrivals:
+                try:
+                    batches = wire.decode_frame(payload)
+                except wire.WireFormatError:
+                    # WAN damage caught at the door by the wire CRC — the
+                    # frame never touches replica state, no ack returns
+                    st.corrupt_frames += 1
+                    if self.monitor is not None:
+                        self.monitor.record_delivery_fault(region, "corrupt_frame")
+                    continue
+                decoded_any = True
+                for batch in batches:
+                    if batch.seq != wire.BOOTSTRAP_SEQ and self.log.is_acked(
+                        region, batch.seq
+                    ):
+                        st.redelivered_batches += 1
+                        if self.monitor is not None:
+                            self.monitor.record_delivery_fault(region, "redelivered")
+                    applied.append(self._apply_decoded(region, batch))
+                    applied_rows += batch.rows
+                    if ack_ok and batch.seq != wire.BOOTSTRAP_SEQ:
+                        self.log.ack(region, batch.seq)
+        finally:
+            ship["batches"] += len(applied)
+            ship["rows"] += applied_rows
+            plane["batches"] += len(applied)
+            plane["rows"] += applied_rows
+            if self.monitor is not None:
+                self.monitor.record_replication_ship(
+                    applied_rows,
+                    batches=len(applied),
+                    raw_nbytes=frame.raw_nbytes,
+                    wire_nbytes=frame.wire_nbytes,
+                    plane=frame.plane,
+                )
+        if not decoded_any or not ack_ok:
+            st.timeouts += 1
+            if self.monitor is not None:
+                self.monitor.record_delivery_fault(region, "timeout")
+            return None
+        return applied
 
     def apply_batch(self, region: str, batch: ReplicatedBatch) -> dict:
         """Ship + apply ONE batch (either plane) to a replica and
         acknowledge it — a single-batch wire frame, no coalescing.  Exposed
         so tests can drive out-of-order delivery; ``drain`` is the in-order
-        coalescing fast path."""
+        coalescing fast path.  Raises ``DeliveryError`` if the channel ate
+        the frame (the batch stays pending for a later drain)."""
         frame = wire.encode_batch(batch, compress_level=self.compress_level)
-        return self._ship_frame(region, frame)[0]
+        stats = self._ship_frame(region, frame)
+        if not stats:
+            raise DeliveryError(f"batch seq {batch.seq} undelivered to {region}")
+        return stats[0]
 
     def drain(
-        self, region: Optional[str] = None, max_batches: Optional[int] = None
+        self,
+        region: Optional[str] = None,
+        max_batches: Optional[int] = None,
+        *,
+        force: bool = False,
     ) -> dict:
         """Apply pending batches in sequence order — all replicas or one.
         Adjacent same-plane same-table batches coalesce into one wire frame
@@ -667,15 +870,49 @@ class GeoReplicator:
         SAME frame — logged batches are immutable, so a run's encoding is
         a pure function of (plane, table, seq range) and is encoded (and
         zlib-compressed) once per drain pass, not once per replica.
-        Returns {region: {"applied_batches", "applied_rows"}}."""
+
+        Each pass advances the replica's logical delivery clock by one
+        tick.  Unless ``force``d (promotion replay must push through), a
+        backing-off link is skipped (``"deferred": "backoff"``) and a DEAD
+        link gets a probe at its schedule instead of real frames
+        (``"deferred": "dead"``); the first failed frame ends the pass for
+        that replica and feeds the state machine.
+        Returns {region: {"applied_batches", "applied_rows", ...}}."""
         regions = [region] if region is not None else self.replica_regions()
         out: dict[str, dict] = {}
         encoded: dict[tuple, object] = {}
         for r in regions:
+            st = self.delivery[r]
+            st.tick += 1
+            if not force:
+                if st.status == "dead":
+                    if st.tick >= st.next_probe_tick:
+                        self.probe(r)
+                    # the probe may have evicted r, or flipped it healthy
+                    if self.delivery.get(r) is None or (
+                        self.delivery[r].status == "dead"
+                    ):
+                        out[r] = {
+                            "applied_batches": 0,
+                            "applied_rows": 0,
+                            "deferred": "dead",
+                        }
+                        continue
+                elif st.tick < st.backoff_until:
+                    out[r] = {
+                        "applied_batches": 0,
+                        "applied_rows": 0,
+                        "deferred": "backoff",
+                    }
+                    self._record_lag(r)
+                    continue
             pend = self.log.pending(r)
             if max_batches is not None:
                 pend = pend[:max_batches]
             rows = 0
+            applied_batches = 0
+            shipped_any = False
+            failed = False
             for run in wire.coalesce(pend):
                 # exact seq tuple, not a (first, last) range: out-of-order
                 # acks can punch holes in one replica's pending run, and a
@@ -686,12 +923,115 @@ class GeoReplicator:
                 if frame is None:
                     frame = wire.encode_run(run, compress_level=self.compress_level)
                     encoded[key] = frame
-                self._ship_frame(r, frame)
+                stats = self._ship_frame(r, frame)
+                if stats is None:
+                    self._record_failure(r)
+                    failed = True
+                    break
+                shipped_any = True
+                applied_batches += len(stats)
                 rows += frame.rows
-            out[r] = {"applied_batches": len(pend), "applied_rows": rows}
-            self._record_lag(r)
+            if not failed and shipped_any:
+                self._record_success(r)
+            out[r] = {"applied_batches": applied_batches, "applied_rows": rows}
+            if r in self.delivery:  # a failure may have evicted r
+                self._record_lag(r)
+            else:
+                out[r]["evicted"] = True
         self.log.truncate()
         return out
+
+    # -- delivery state machine ------------------------------------------------
+    def _set_state(self, region: str, st: DeliveryState, status: str) -> None:
+        if st.status == status:
+            return
+        st.transitions.append((st.tick, st.status, status))
+        st.status = status
+        if self.monitor is not None:
+            self.monitor.record_delivery_state(region, status, STATE_CODES[status])
+
+    def _record_failure(self, region: str) -> None:
+        """One failed delivery: schedule capped exponential backoff with
+        deterministic per-(replica, streak) jitter, walk the health state
+        machine, and — at the DEAD transition — drive ``topology.mark_down``
+        so read routing and ``failover()`` react to the DETECTED outage."""
+        st = self.delivery[region]
+        st.consecutive_failures += 1
+        n = st.consecutive_failures
+        p = self.policy
+        backoff = min(p.backoff_cap, p.backoff_base << min(n - 1, 10))
+        # deterministic jitter in [0, backoff): desynchronizes replica
+        # retry schedules without any RNG state (chaos runs stay replayable)
+        jitter = mix64(zlib.crc32(region.encode()) ^ (n << 1)) % max(backoff, 1)
+        st.backoff_until = st.tick + backoff + jitter
+        if n >= p.dead_after and st.status != "dead":
+            self._set_state(region, st, "dead")
+            self.topology.mark_down(region)
+            st.next_probe_tick = st.tick + p.probe_interval
+            if self.monitor is not None:
+                self.monitor.alert(
+                    f"replica {region} marked DEAD after {n} consecutive "
+                    f"delivery failures"
+                )
+        elif n >= p.suspect_after and st.status == "healthy":
+            self._set_state(region, st, "suspect")
+        if (
+            p.evict_after is not None
+            and n >= p.evict_after
+            and region != self.home_region
+        ):
+            self.evict_replica(region)
+
+    def _record_success(self, region: str) -> None:
+        st = self.delivery[region]
+        st.consecutive_failures = 0
+        st.backoff_until = st.tick
+        if st.status != "healthy":
+            was_dead = st.status == "dead"
+            self._set_state(region, st, "healthy")
+            if was_dead:
+                # recovery undoes the DETECTED mark_down: the replica is
+                # still cursor-tracked, so normal draining catches it up —
+                # no bootstrap needed (that path is for EVICTED regions)
+                self.topology.mark_up(region)
+
+    def probe(self, region: str) -> bool:
+        """Re-probe a DEAD link with a zero-batch probe frame.  Success
+        flips the link back HEALTHY (and the region back up); failure
+        re-schedules the next probe — and can push the streak over the
+        eviction threshold.  Any frames a faulty channel had withheld
+        (reorder) ride in with the probe's delivery and are applied."""
+        st = self.delivery[region]
+        st.probes += 1
+        ok = self._ship_frame(region, wire.encode_probe()) is not None
+        if ok:
+            self._record_success(region)
+            return True
+        self._record_failure(region)
+        st = self.delivery.get(region)  # the failure may have evicted it
+        if st is not None:
+            st.next_probe_tick = st.tick + self.policy.probe_interval
+        return False
+
+    def evict_replica(self, region: str) -> None:
+        """Tear down a replica that stayed dead past ``evict_after``: its
+        stores, ledger, cursor, and delivery state all go — the log stops
+        retaining batches for it, so one unreachable region cannot pin the
+        log at capacity forever.  Re-admission is a fresh ``rejoin`` (delta
+        bootstrap), and ``on_evict`` lets the control plane react."""
+        if region == self.home_region:
+            raise ValueError("cannot evict the home region")
+        self.stores.pop(region, None)
+        self.offline_stores.pop(region, None)
+        self.shipped.pop(region, None)
+        self.delivery.pop(region, None)
+        self.log.drop_replica(region)
+        if self.monitor is not None:
+            self.monitor.clear_replica_gauges(region)
+            self.monitor.system.inc("replication/evictions")
+            self.monitor.alert(f"replica {region} evicted from the serving set")
+        if self.on_evict is not None:
+            self.on_evict(region)
 
     # -- lag accounting --------------------------------------------------------
     def lag_batches(self, region: str) -> int:
@@ -740,7 +1080,22 @@ class GeoReplicator:
             return {"replayed_batches": 0, "replayed_rows": 0}
         if region not in self.stores:
             raise RegionDownError(f"no replica store in {region}")
-        replay = self.drain(region)[region]
+        # the replay MUST complete — a promoted home missing acked-elsewhere
+        # suffix batches would diverge forever — so push through channel
+        # faults with forced drains (no backoff deferral, probes bypassed)
+        # and fail loudly if the link won't carry the suffix at all
+        replay = {"applied_batches": 0, "applied_rows": 0}
+        for _ in range(self.policy.promote_rounds):
+            got = self.drain(region, force=True)[region]
+            replay["applied_batches"] += got["applied_batches"]
+            replay["applied_rows"] += got["applied_rows"]
+            if self.log.pending_count(region) == 0:
+                break
+        else:
+            raise DeliveryError(
+                f"promotion replay for {region} did not converge within "
+                f"{self.policy.promote_rounds} forced drains"
+            )
         old_home_region = self.home_region
         old_home = self.stores[self.home_region]
         try:
@@ -756,6 +1111,7 @@ class GeoReplicator:
         del self.stores[self.home_region]
         self.log.drop_replica(region)
         self.shipped.pop(region, None)
+        self.delivery.pop(region, None)
         self.home_region = region
         if self.monitor is not None:
             # neither region is a replica any more: the promoted one is the
@@ -802,6 +1158,8 @@ class GeoFeatureStore:
         log_capacity: int = 1024,
         auto_drain: bool = False,
         compress_level: Optional[int] = DEFAULT_COMPRESS_LEVEL,
+        channel: Optional[Channel] = None,
+        delivery_policy: Optional[DeliveryPolicy] = None,
         **fs_kwargs,
     ) -> None:
         self.fs = FeatureStore(
@@ -816,6 +1174,9 @@ class GeoFeatureStore:
         self.max_lag_batches = max_lag_batches
         self.auto_drain = auto_drain
         self.log = ReplicationLog(capacity=log_capacity)
+        #: regions the delivery state machine evicted; each all-region
+        #: drain re-probes them and rejoins the ones whose link came back
+        self.evicted: set[str] = set()
         self.replicator = GeoReplicator(
             self.fs.online,
             topology=topology,
@@ -825,6 +1186,9 @@ class GeoFeatureStore:
             clock=self.fs.clock,
             monitor=self.fs.monitor,
             compress_level=compress_level,
+            channel=channel,
+            policy=delivery_policy,
+            on_evict=self._on_evict,
         )
         self.fs.attach_replication(self.replicator)
         self.last_bootstrap: Optional[dict] = None
@@ -916,7 +1280,61 @@ class GeoFeatureStore:
         return stats
 
     def drain(self, region: Optional[str] = None) -> dict:
-        return self.replicator.drain(region)
+        out = self.replicator.drain(region)
+        if region is None:
+            # evicted regions are no longer cursor-tracked, so the normal
+            # probe path can't see them — re-probe here and rejoin (delta
+            # bootstrap) the ones whose link carries bytes again
+            for r in sorted(self.evicted):
+                if self._try_rejoin(r):
+                    out[r] = {
+                        "applied_batches": 0,
+                        "applied_rows": 0,
+                        "rejoined": True,
+                    }
+        return out
+
+    def _try_rejoin(self, region: str) -> bool:
+        """One recovery attempt for an evicted region: probe the link with
+        a zero-batch frame; if the probe lands, re-admit through the full
+        ``rejoin`` delta bootstrap.  A bootstrap that dies against a
+        still-flaky link rolls membership back (the region stays evicted)
+        and the next drain tries again."""
+        rep = self.replicator
+        d = rep.channel.transmit(self.home_region, region, wire.encode_probe())
+        decoded = False
+        for payload in d.arrivals:
+            try:
+                wire.decode_frame(payload)
+                decoded = True
+            except wire.WireFormatError:
+                pass
+        if d.ack_lost or d.latency_ms > rep.policy.ack_timeout_ms or not decoded:
+            return False
+        self.mark_up(region)
+        self.evicted.discard(region)
+        try:
+            self.rejoin(region)
+        except DeliveryError:
+            rep.evict_replica(region)  # rolls back via the on_evict hook
+            self.mark_down(region)
+            return False
+        return True
+
+    def recover(self, region: str) -> dict:
+        """Manually re-admit an evicted region (the automatic path runs on
+        every all-region ``drain``).  Raises ``DeliveryError`` if the link
+        still won't carry the bootstrap."""
+        if region not in self.evicted:
+            raise ValueError(f"region {region} is not evicted")
+        self.mark_up(region)
+        self.evicted.discard(region)
+        try:
+            return self.rejoin(region)
+        except DeliveryError:
+            self.replicator.evict_replica(region)
+            self.mark_down(region)
+            raise
 
     def lag(self, region: str) -> dict:
         return self.replicator.lag(region)
@@ -959,6 +1377,13 @@ class GeoFeatureStore:
         return vals, found, {"region": serving, "modeled_ms": ms}
 
     # -- failure handling --------------------------------------------------------
+    def _on_evict(self, region: str) -> None:
+        """Replicator eviction hook: drop the region from placement's
+        serving set and queue it for the auto-rejoin probe in ``drain``."""
+        if region != self.placement.home_region:
+            self.placement.remove_replica(region)
+        self.evicted.add(region)
+
     def mark_down(self, region: str) -> None:
         self.placement.mark_down(region)
 

@@ -18,7 +18,21 @@ One FRAME carries one or more batches (a coalesced run shares a single
 header and a single compression stream)::
 
     magic "FW" | u8 version | u8 flags (bit0: zlib) | u32 batch_count
-    | u64 raw_payload_len | payload
+    | u64 raw_payload_len | u32 crc32 | payload
+
+``crc32`` (wire version 2, ISSUE 7) is the checksum of the WHOLE frame as
+shipped — the header with the crc field zeroed, then the payload exactly
+as transmitted (post-compression).  The magic/length checks catch
+truncation and framing damage but passed silently-corrupted raw payload
+arrays straight into replica state, and a payload-only checksum leaves
+the header's own bytes unprotected (a flipped ``flags`` bit nothing
+validates decodes "successfully"), so the decoder verifies the frame
+checksum right after the magic/version gate and rejects any mismatch
+with ``WireFormatError`` — a fault-injected (or real) WAN bit-flip
+ANYWHERE in the frame surfaces as a detected delivery failure the
+publisher retries, never as divergent replica bytes.  ``batch_count == 0``
+is a valid frame (``encode_probe``): an empty payload the delivery state
+machine uses to re-probe a DEAD replica's link without touching any store.
 
 ``payload`` is the concatenation of batch records, zlib-compressed when
 flags bit0 is set.  Each batch record::
@@ -76,17 +90,23 @@ __all__ = [
     "decode_batch",
     "decode_frame",
     "encode_batch",
+    "encode_probe",
     "encode_run",
 ]
 
 MAGIC = b"FW"
-VERSION = 1
+#: v2 (ISSUE 7): +u32 crc32 of the shipped frame (zeroed-crc header +
+#: payload) in the header; v1 frames (no checksum) are rejected — silent
+#: corruption is worse than a loud version mismatch on a mixed-version link
+VERSION = 2
 FLAG_ZLIB = 0x01
 #: out-of-log sentinel: bootstrap chunks ship over the wire but are not
 #: replication-log entries and must never be acked
 BOOTSTRAP_SEQ = -1
+#: table tag on zero-batch probe frames (never registered, never applied)
+PROBE_TABLE = ("__probe__", 0)
 
-_HEADER = struct.Struct("<2sBBIQ")
+_HEADER = struct.Struct("<2sBBIQI")
 #: fixed per-frame envelope cost — what break-even accounting must add to
 #: the raw payload when comparing against wire bytes
 HEADER_SIZE = _HEADER.size
@@ -128,6 +148,14 @@ class WireFrame:
 
 
 # -- encode -------------------------------------------------------------------
+
+
+def _frame_crc(flags: int, batch_count: int, raw_len: int, payload: bytes) -> int:
+    """crc32 over the whole frame with the header's crc field zeroed —
+    the checksum covers the header's own fields, so a flipped flag bit or
+    length byte is as loudly rejected as a flipped payload byte."""
+    head = _HEADER.pack(MAGIC, VERSION, flags, batch_count, raw_len, 0)
+    return zlib.crc32(payload, zlib.crc32(head))
 
 
 def _encode_array(out: list[bytes], a: np.ndarray) -> None:
@@ -194,7 +222,13 @@ def encode_run(
         # envelope for nothing; the flag bit keeps decode unambiguous
         if len(packed) < raw_len:
             payload, flags = packed, FLAG_ZLIB
-    head = _HEADER.pack(MAGIC, VERSION, flags, len(batches), raw_len)
+    # checksum the frame AS SHIPPED (header with the crc field zeroed +
+    # post-compression payload): the receiver verifies it before touching
+    # zlib or the record structure, so WAN corruption anywhere in the
+    # frame — header fields included — is rejected at the door instead of
+    # decoded into state
+    crc = _frame_crc(flags, len(batches), raw_len, payload)
+    head = _HEADER.pack(MAGIC, VERSION, flags, len(batches), raw_len, crc)
     return WireFrame(
         data=head + payload,
         raw_nbytes=raw_len,
@@ -212,6 +246,17 @@ def encode_batch(
 ) -> WireFrame:
     """Serialize one batch (either plane) into one contiguous buffer."""
     return encode_run([batch], compress_level=compress_level)
+
+
+def encode_probe() -> WireFrame:
+    """A zero-batch frame: the smallest well-formed wire message.  The
+    delivery state machine transmits it to test whether a DEAD replica's
+    link carries bytes again — decoding yields no batches, so applying a
+    probe touches no store and acks nothing."""
+    head = _HEADER.pack(MAGIC, VERSION, 0, 0, 0, _frame_crc(0, 0, 0, b""))
+    return WireFrame(
+        data=head, raw_nbytes=0, seqs=(), rows=0, plane="online", table=PROBE_TABLE
+    )
 
 
 # -- decode -------------------------------------------------------------------
@@ -283,12 +328,27 @@ def decode_frame(data: bytes) -> list[ReplicatedBatch]:
     never alias, or be corrupted through, publisher memory."""
     if len(data) < _HEADER.size:
         raise WireFormatError(f"frame shorter than header: {len(data)} bytes")
-    magic, version, flags, batch_count, raw_len = _HEADER.unpack(data[: _HEADER.size])
+    magic, version, flags, batch_count, raw_len, crc = _HEADER.unpack(
+        data[: _HEADER.size]
+    )
     if magic != MAGIC:
         raise WireFormatError(f"bad magic {magic!r}")
     if version != VERSION:
         raise WireFormatError(f"unsupported wire version {version}")
     payload = data[_HEADER.size :]
+    # verify the checksum over the frame AS SHIPPED (header fields
+    # included), before zlib or any record parsing runs: corrupted bytes
+    # are rejected at the door
+    got = _frame_crc(flags, batch_count, raw_len, payload)
+    if got != crc:
+        raise WireFormatError(
+            f"frame checksum mismatch: crc32 {got:#010x} != declared {crc:#010x}"
+        )
+    if flags & ~FLAG_ZLIB:
+        # belt over the crc's braces: a sender that stamps a valid
+        # checksum over flag bits this version doesn't define is a
+        # protocol error, not something to silently ignore
+        raise WireFormatError(f"unknown flag bits {flags:#04x}")
     if flags & FLAG_ZLIB:
         dec = zlib.decompressobj()
         try:

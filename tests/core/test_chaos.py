@@ -1,0 +1,619 @@
+"""Chaos convergence suite (ISSUE 7): seeded faults, detected failure.
+
+The tentpole claims under test:
+
+  * CONVERGENCE — under every seeded fault schedule (drop / duplicate /
+    reorder / corrupt / partition at >= 10% rates, both planes), repeated
+    draining converges every replica byte-identical online and
+    chunk-set-identical offline, and no un-acked batch is ever truncated;
+  * DETECTION — a partitioned replica walks HEALTHY -> SUSPECT -> DEAD on
+    consecutive delivery failures, which drives ``topology.mark_down`` so
+    read routing avoids it WITHOUT any manual flip, and probe-based
+    recovery (or eviction + auto-rejoin delta bootstrap) brings it back;
+  * DETERMINISM — the whole fault schedule and the state machine's
+    reaction to it are a pure function of the plan seed: identical runs
+    produce identical retry/timeout/fault counters (what lets the chaos
+    bench gate those counters EXACTLY in CI);
+  * IDEMPOTENCE — redelivering any prefix/suffix of the frames a replica
+    already applied (both planes, including bootstrap ``seq=-1`` frames)
+    leaves its state bit-identical — at-least-once delivery, exactly-once
+    effect;
+  * ACCOUNTING — a replica-side apply error mid-frame still records the
+    applied prefix in the shipping ledger and keeps its acks (the
+    partial-frame regression from the v1 ``_ship_frame``).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import wire
+from repro.core.channel import (
+    Delivery,
+    FaultPlan,
+    FaultyChannel,
+    InProcessChannel,
+)
+from repro.core.online_store import OnlineStore
+from repro.core.regions import GeoTopology, Region, RegionDownError
+from repro.core.replication import DeliveryPolicy, GeoReplicator
+from tests.core.test_replication import (
+    HOUR,
+    assert_dumps_identical,
+    assert_planes_identical,
+    geo_store,
+    make_frame,
+    make_spec,
+    topo,
+)
+
+#: tight thresholds so chaos tests converge in few drain rounds
+FAST_POLICY = DeliveryPolicy(
+    suspect_after=2,
+    dead_after=4,
+    backoff_base=1,
+    backoff_cap=2,
+    probe_interval=1,
+)
+
+
+class ScriptedChannel(InProcessChannel):
+    """Perfect channel with a switch: while ``down``, every transmit is
+    dropped — deterministic outage scripting for state-machine tests."""
+
+    def __init__(self, topology: GeoTopology) -> None:
+        super().__init__(topology)
+        self.down = False
+
+    def transmit(self, src, dst, frame) -> Delivery:
+        if self.down:
+            return Delivery(arrivals=(), latency_ms=0.0, faults=("drop",))
+        return super().transmit(src, dst, frame)
+
+
+class RecordingChannel(InProcessChannel):
+    """Perfect channel that records every (dst, frame bytes) it carried —
+    the redelivery corpus for the idempotence property tests."""
+
+    def __init__(self, topology: GeoTopology) -> None:
+        super().__init__(topology)
+        self.sent: list[tuple[str, bytes]] = []
+
+    def transmit(self, src, dst, frame) -> Delivery:
+        self.sent.append((dst, frame.data))
+        return super().transmit(src, dst, frame)
+
+
+def drive(g, *, ticks=6, start=1):
+    for i in range(start, start + ticks):
+        g.tick(i * HOUR)
+        g.drain()
+
+
+def converge(g, *, rounds=300):
+    """Drain until every replica's cursor reaches the head (and nothing is
+    evicted); fail the test if the schedule never lets it converge."""
+    rep = g.replicator
+    for n in range(rounds):
+        g.drain()
+        done = all(rep.log.pending_count(r) == 0 for r in rep.replica_regions())
+        if done and not g.evicted:
+            return n + 1
+    pytest.fail(f"replicas did not converge within {rounds} drain rounds")
+
+
+def spec_of(g):
+    return g.fs.registry.get_feature_set("act", 1)
+
+
+# -- the seeded fault matrix (CI chaos smoke runs this) ------------------------
+
+
+@pytest.mark.parametrize("seed", [101, 202, 303])
+@pytest.mark.parametrize(
+    "kind,counter",
+    [
+        ("drop_rate", "dropped"),
+        ("dup_rate", "duplicated"),
+        ("reorder_rate", "reordered"),
+        ("corrupt_rate", "corrupted"),
+    ],
+)
+def test_chaos_matrix(seed, kind, counter):
+    """Each fault kind alone, at 25%, for three seeds: both planes of both
+    replicas converge to the home stores, and the fault actually fired."""
+    t = topo()
+    channel = FaultyChannel(FaultPlan(seed=seed, **{kind: 0.25}), t)
+    g = geo_store(
+        topology=t,
+        channel=channel,
+        delivery_policy=FAST_POLICY,
+        replica_regions=("near", "far"),
+    )
+    drive(g, ticks=8)
+    converge(g)
+    assert channel.counts[counter] > 0, "schedule never injected the fault"
+    for region in ("near", "far"):
+        assert_planes_identical(g, region, spec_of(g), f"{kind} seed={seed}")
+
+
+def test_chaos_mixed_faults_converge_and_count():
+    """Everything at once — drop, dup, reorder, corrupt, ack loss, latency
+    spikes — still converges, and the delivery ledger saw real retries,
+    timeouts, CRC rejections, and absorbed redeliveries."""
+    t = topo()
+    plan = FaultPlan(
+        seed=777,
+        drop_rate=0.10,
+        dup_rate=0.05,
+        reorder_rate=0.05,
+        corrupt_rate=0.05,
+        ack_loss_rate=0.05,
+        spike_rate=0.03,
+    )
+    channel = FaultyChannel(plan, t)
+    g = geo_store(
+        topology=t,
+        channel=channel,
+        delivery_policy=FAST_POLICY,
+        replica_regions=("near", "far"),
+    )
+    drive(g, ticks=8)
+    converge(g)
+    for region in ("near", "far"):
+        assert_planes_identical(g, region, spec_of(g), f"mixed chaos {region}")
+    states = g.replicator.delivery
+    totals = {
+        k: sum(getattr(states[r], k) for r in states)
+        for k in ("retries", "timeouts", "corrupt_frames", "redelivered_batches")
+    }
+    assert totals["retries"] > 0
+    assert totals["timeouts"] > 0
+    assert totals["corrupt_frames"] > 0
+    assert totals["redelivered_batches"] > 0
+    mon = g.fs.monitor.system.counters
+    assert mon["replication/retries"] == totals["retries"]
+    assert mon["replication/timeout"] == totals["timeouts"]
+    assert mon["replication/corrupt_frame"] == totals["corrupt_frames"]
+    assert mon["replication/redelivered"] == totals["redelivered_batches"]
+
+
+def test_chaos_is_deterministic_per_seed():
+    """Two identical runs over the same plan replay the same faults and the
+    same state-machine reaction, counter for counter — the property that
+    lets CI gate chaos retry counts exactly."""
+
+    def run():
+        t = topo()
+        channel = FaultyChannel(
+            FaultPlan(seed=42, drop_rate=0.15, dup_rate=0.08, corrupt_rate=0.08), t
+        )
+        g = geo_store(
+            topology=t,
+            channel=channel,
+            delivery_policy=FAST_POLICY,
+            replica_regions=("near", "far"),
+        )
+        drive(g)
+        rounds = converge(g)
+        states = g.replicator.delivery
+        return (
+            rounds,
+            dict(channel.counts),
+            {
+                r: (st.retries, st.timeouts, st.corrupt_frames, st.transitions)
+                for r, st in states.items()
+            },
+        )
+
+    assert run() == run()
+
+
+# -- detected failure: partition -> SUSPECT -> DEAD -> recovery ----------------
+
+
+def test_partition_walks_suspect_dead_and_auto_recovers():
+    """A partition window on one link drives the full detection arc with NO
+    manual mark_down: SUSPECT after 2 straight failures, DEAD after 4
+    (routing now avoids the region), probes fire on the probe schedule,
+    and the first probe through the healed link flips the region back up
+    and drains it to convergence."""
+    t = topo()
+    # events 0..7 to "near" are lost; everything else is perfect
+    channel = FaultyChannel(FaultPlan(seed=1, partitions=(("near", 0, 8),)), t)
+    g = geo_store(
+        topology=t,
+        channel=channel,
+        delivery_policy=FAST_POLICY,
+        replica_regions=("near", "far"),
+    )
+    g.tick(HOUR)
+    st = g.replicator.delivery["near"]
+    seen = set()
+    for _ in range(30):
+        g.drain()
+        seen.add(st.status)
+        if st.status == "dead":
+            break
+    assert seen == {"healthy", "suspect", "dead"}
+    assert [(a, b) for _, a, b in st.transitions] == [
+        ("healthy", "suspect"),
+        ("suspect", "dead"),
+    ]
+    # DETECTED death marked the region down: routing avoids it
+    assert t.regions["near"].healthy is False
+    serving, _ = g.route_read("near")
+    assert serving != "near"
+    # the far replica was never disturbed
+    assert g.replicator.delivery["far"].status == "healthy"
+    # heal: probes keep firing on the schedule until one crosses the window
+    g.tick(2 * HOUR)
+    converge(g)
+    assert st.status == "healthy"
+    assert t.regions["near"].healthy is True
+    assert ("dead", "healthy") in [(a, b) for _, a, b in st.transitions]
+    for region in ("near", "far"):
+        assert_planes_identical(g, region, spec_of(g), "post-partition")
+    # recovered and in sync: local reads serve locally again
+    serving, _ = g.route_read("near")
+    assert serving == "near"
+
+
+def test_long_partition_evicts_then_auto_rejoins_via_bootstrap():
+    """Past ``evict_after`` failures the replica is torn out entirely (its
+    cursor no longer pins the log); when the link heals, the next
+    all-region drain re-probes it and re-admits it through the full
+    delta-bootstrap rejoin — automatically."""
+    t = topo()
+    channel = FaultyChannel(FaultPlan(seed=2, partitions=(("near", 0, 9),)), t)
+    policy = DeliveryPolicy(
+        suspect_after=1,
+        dead_after=2,
+        backoff_base=1,
+        backoff_cap=1,
+        probe_interval=1,
+        evict_after=5,
+    )
+    g = geo_store(
+        topology=t,
+        channel=channel,
+        delivery_policy=policy,
+        replica_regions=("near", "far"),
+    )
+    g.tick(HOUR)
+    for _ in range(10):
+        g.drain()
+        if "near" in g.evicted:
+            break
+    assert "near" in g.evicted
+    assert "near" not in g.replicator.stores
+    assert "near" not in g.replicator.delivery
+    assert "near" not in g.placement.replicas
+    assert g.fs.monitor.system.counters["replication/evictions"] == 1
+    # while evicted, the log no longer retains batches for it
+    with pytest.raises(KeyError):
+        g.replicator.log.pending("near")
+    g.tick(2 * HOUR)  # more data lands while the region is out
+    converge(g)  # auto-rejoin probes run inside the all-region drains
+    assert "near" not in g.evicted
+    assert "near" in g.replicator.stores
+    assert g.last_bootstrap is not None and g.last_bootstrap["chunks"] > 0
+    for region in ("near", "far"):
+        assert_planes_identical(g, region, spec_of(g), "post-eviction rejoin")
+    assert t.regions["near"].healthy is True
+
+
+def test_detected_death_feeds_failover():
+    """When the DEAD region is the one a consumer depends on, the standing
+    failover path composes with detection: kill the link to every replica,
+    mark the home down, and the promoted replica is byte-identical."""
+    t = topo()
+    channel = ScriptedChannel(t)
+    g = geo_store(
+        topology=t,
+        channel=channel,
+        delivery_policy=FAST_POLICY,
+        replica_regions=("near",),
+    )
+    drive(g, ticks=3)
+    spec = spec_of(g)
+    g.tick(4 * HOUR)  # an un-drained suffix is pending at failure time
+    home_dump = g.fs.online.dump_all(spec.name, spec.version)
+    # the home region dies (operator signal); promotion replays the pending
+    # suffix over the still-working channel
+    g.mark_down("home")
+    got = g.failover()
+    assert got["promoted"] == "near"
+    db = g.fs.online.dump_all(spec.name, spec.version)
+    assert set(home_dump.names) == set(db.names)
+    for name in home_dump.names:
+        np.testing.assert_array_equal(home_dump[name], db[name], err_msg=name)
+
+
+def test_promotion_replay_pushes_through_faults_or_raises():
+    """Promotion replay retries forced drains through a flaky channel; if
+    the channel never delivers, it raises DeliveryError rather than
+    promoting a replica that silently lost acked-elsewhere batches."""
+    from repro.core.channel import DeliveryError
+
+    t = topo()
+    channel = ScriptedChannel(t)
+    g = geo_store(
+        topology=t,
+        channel=channel,
+        delivery_policy=FAST_POLICY,
+        replica_regions=("near",),
+    )
+    drive(g, ticks=2)
+    g.tick(3 * HOUR)  # pending suffix exists
+    channel.down = True
+    g.mark_down("home")
+    with pytest.raises(DeliveryError, match="promotion replay"):
+        g.failover()
+
+
+# -- state machine units -------------------------------------------------------
+
+
+def test_backoff_schedule_is_capped_and_deterministic():
+    """Consecutive failures back off exponentially (capped) with
+    deterministic jitter: two identical runs produce the identical
+    tick-by-tick trace, and backoff defers most drains (failures << drains)."""
+
+    def run():
+        t = topo()
+        channel = ScriptedChannel(t)
+        g = geo_store(
+            topology=t,
+            channel=channel,
+            delivery_policy=DeliveryPolicy(
+                suspect_after=2,
+                dead_after=4,
+                backoff_base=1,
+                backoff_cap=4,
+                probe_interval=3,
+            ),
+            replica_regions=("near",),
+        )
+        g.tick(HOUR)
+        channel.down = True
+        st = g.replicator.delivery["near"]
+        trace = []
+        for _ in range(40):
+            g.drain("near")
+            trace.append(
+                (st.tick, st.status, st.consecutive_failures, st.backoff_until)
+            )
+        return g, channel, st, trace
+
+    g1, _, st1, trace1 = run()
+    g2, _, st2, trace2 = run()
+    assert trace1 == trace2
+    assert st1.transitions == st2.transitions
+    assert [(a, b) for _, a, b in st1.transitions] == [
+        ("healthy", "suspect"),
+        ("suspect", "dead"),
+    ]
+    # backoff + probe cadence means only a fraction of drains transmitted
+    assert st1.consecutive_failures < 40
+    assert st1.probes > 0
+    assert g1.topology.regions["near"].healthy is False
+    # gauges track the walk
+    gauges = g1.fs.monitor.system.gauges
+    assert gauges["replication/state/near"] == 2.0
+
+
+def test_recovery_resets_failure_streak_and_backoff():
+    t = topo()
+    channel = ScriptedChannel(t)
+    g = geo_store(
+        topology=t,
+        channel=channel,
+        delivery_policy=FAST_POLICY,
+        replica_regions=("near",),
+    )
+    g.tick(HOUR)
+    channel.down = True
+    st = g.replicator.delivery["near"]
+    for _ in range(12):
+        g.drain("near")
+    assert st.status == "dead" and st.consecutive_failures >= 4
+    channel.down = False
+    for _ in range(6):
+        g.drain("near")
+    assert st.status == "healthy"
+    assert st.consecutive_failures == 0
+    assert st.backoff_until <= st.tick
+    assert g.replicator.log.pending_count("near") == 0
+    assert g.fs.monitor.system.gauges["replication/state/near"] == 0.0
+    assert_planes_identical(g, "near", spec_of(g), "post-outage catch-up")
+
+
+# -- redelivery idempotence (satellite: at-least-once, exactly-once effect) ----
+
+
+def test_replaying_any_prefix_or_suffix_of_shipped_frames_is_a_noop():
+    """Record every frame a replica ever received — bootstrap ``seq=-1``
+    chunks included — then redeliver arbitrary prefixes/suffixes (and the
+    whole corpus, reversed) straight into the apply path: replica state
+    must not move by a byte on either plane."""
+    t = topo()
+    channel = RecordingChannel(t)
+    g = geo_store(topology=t, channel=channel, delivery_policy=FAST_POLICY)
+    drive(g, ticks=3)  # home accumulates data first ...
+    g.add_replica("near")  # ... so add_replica streams real bootstrap chunks
+    drive(g, ticks=3, start=4)
+    converge(g)
+    spec = spec_of(g)
+    assert_planes_identical(g, "near", spec, "pre-replay baseline")
+    payloads = [data for dst, data in channel.sent if dst == "near"]
+    corpus = [wire.decode_frame(data) for data in payloads]
+    assert any(b.seq == wire.BOOTSTRAP_SEQ for f in corpus for b in f)
+    assert any(b.plane == "offline" for f in corpus for b in f)
+    assert any(b.plane == "online" for f in corpus for b in f)
+    rep = g.replicator
+    n = len(corpus)
+    slices = [corpus[: n // 3], corpus[n // 2 :], corpus[::-1], corpus]
+    for i, frames in enumerate(slices):
+        for batches in frames:
+            for batch in batches:
+                rep._apply_decoded("near", batch)
+        assert_planes_identical(g, "near", spec, f"replay slice {i}")
+
+
+def test_faulty_redelivery_never_double_acks():
+    """Under duplication + ack loss, acked batches arrive again and again;
+    the per-seq dedup counts them and the cursor math never regresses or
+    over-advances (pending_count stays exact)."""
+    t = topo()
+    channel = FaultyChannel(
+        FaultPlan(seed=9, dup_rate=0.30, ack_loss_rate=0.20), t
+    )
+    g = geo_store(
+        topology=t,
+        channel=channel,
+        delivery_policy=FAST_POLICY,
+        replica_regions=("near",),
+    )
+    drive(g, ticks=5)
+    converge(g)
+    rep = g.replicator
+    st = rep.delivery["near"]
+    assert st.redelivered_batches > 0
+    assert rep.log.pending_count("near") == 0
+    assert rep.log.cursors["near"] == rep.log.next_seq
+    assert_planes_identical(g, "near", spec_of(g), "dup/ack-loss chaos")
+
+
+# -- exception-safe partial-frame accounting (satellite regression) ------------
+
+
+def test_partial_frame_apply_failure_keeps_prefix_acks_and_ledger():
+    """A replica-side apply error on batch 2 of a 3-batch coalesced frame:
+    batch 1's ack and ledger entry survive, the error propagates loudly,
+    and a later drain completes the frame to byte-identical state."""
+    spec = make_spec()
+    t = GeoTopology(
+        regions={"h": Region("h"), "r": Region("r")},
+        cross_region_latency_ms=40.0,
+    )
+    home = OnlineStore(num_partitions=4)
+    repl = GeoReplicator(home, topology=t, home_region="h")
+    replica = OnlineStore(num_partitions=4)
+    repl.add_replica("r", replica)
+    rng = np.random.default_rng(5)
+    for i in range(3):
+        home.merge(spec, make_frame(rng, 50, 20, 30 * (i + 1)), 1_000 + i)
+    real = replica.merge_reduced
+    calls = {"n": 0}
+
+    def flaky(*a, **kw):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise RuntimeError("replica store exploded mid-frame")
+        return real(*a, **kw)
+
+    replica.merge_reduced = flaky
+    with pytest.raises(RuntimeError, match="mid-frame"):
+        repl.drain("r")
+    ship = repl.shipped["r"]
+    assert ship["frames"] == 1
+    assert ship["batches"] == 1  # ONLY the applied prefix — not 0, not 3
+    assert ship["rows"] > 0
+    assert ship["bytes"] > 0  # the transmit itself was charged
+    assert repl.log.is_acked("r", 0)
+    assert not repl.log.is_acked("r", 1)
+    assert repl.log.cursors["r"] == 1
+    replica.merge_reduced = real
+    repl.drain("r")
+    assert repl.log.pending_count("r") == 0
+    assert_dumps_identical(home, replica, spec, "post partial-frame recovery")
+
+
+def test_bootstrap_chunks_retry_then_fail_loudly():
+    """Bootstrap chunks are not log entries — a silently lost one would be
+    lost forever — so the stream retries per chunk and raises
+    DeliveryError when the channel never carries it."""
+    from repro.core.channel import DeliveryError
+
+    t = topo()
+    channel = ScriptedChannel(t)
+    g = geo_store(
+        topology=t,
+        channel=channel,
+        delivery_policy=DeliveryPolicy(bootstrap_retries=3),
+    )
+    drive(g, ticks=2)
+    channel.down = True
+    with pytest.raises(DeliveryError, match="bootstrap chunk"):
+        g.add_replica("near")
+    st_count = g.fs.monitor.system.counters
+    assert st_count.get("replication/timeout/near", 0) >= 4  # 1 try + 3 retries
+
+
+# -- fault plan purity ---------------------------------------------------------
+
+
+def test_fault_plan_is_pure_seeded_and_honors_partitions():
+    plan = FaultPlan(seed=7, drop_rate=0.3, dup_rate=0.2)
+    a = [plan.decide("r", e) for e in range(200)]
+    assert a == [plan.decide("r", e) for e in range(200)]  # pure
+    other_seed = FaultPlan(seed=8, drop_rate=0.3, dup_rate=0.2)
+    assert [other_seed.decide("r", e) for e in range(200)] != a
+    drops = sum("drop" in f for f in a)
+    assert 30 <= drops <= 90  # ~0.3 of 200, loosely
+    # corruption must always actually change the bytes (CRC must fire)
+    data = bytes(range(64))
+    for e in range(32):
+        assert plan.corrupt("r", e, data) != data
+    p = FaultPlan(seed=1, drop_rate=1.0, partitions=(("r", 0, 5),))
+    assert p.decide("r", 0) == ["partition"]
+    assert p.partitioned("r", 4) and not p.partitioned("r", 5)
+    assert not p.partitioned("other", 2)
+
+
+def test_faulty_channel_counts_what_it_injects():
+    t = topo()
+    channel = FaultyChannel(FaultPlan(seed=3, drop_rate=0.5), t)
+    probe = wire.encode_probe()
+    deliveries = [channel.transmit("home", "near", probe) for _ in range(60)]
+    assert channel.counts["transmits"] == 60
+    dropped = sum(1 for d in deliveries if not d.arrivals)
+    assert channel.counts["dropped"] == dropped > 0
+    # a different destination draws an independent schedule
+    channel.transmit("home", "far", probe)
+    assert channel.events == {"near": 60, "far": 1}
+
+
+def test_in_process_channel_is_perfect():
+    t = topo()
+    channel = InProcessChannel(t)
+    frame = wire.encode_probe()
+    d = channel.transmit("home", "near", frame)
+    assert d.arrivals == (frame.data,)
+    assert d.ack_lost is False
+    assert d.latency_ms == t.transfer_ms("home", "near", frame.wire_nbytes)
+
+
+def test_route_read_raises_when_detection_downs_the_only_replica():
+    """Detection composes with the standing routing contract: when every
+    serving candidate is detected-down, route_read raises RegionDownError
+    (home is always a candidate, so kill the home read path by lag)."""
+    t = topo()
+    channel = ScriptedChannel(t)
+    g = geo_store(
+        topology=t,
+        channel=channel,
+        delivery_policy=FAST_POLICY,
+        replica_regions=("near",),
+    )
+    g.tick(HOUR)
+    channel.down = True
+    for _ in range(12):
+        g.drain()
+    assert t.regions["near"].healthy is False
+    # the home still serves; the detected-down replica is never picked
+    serving, _ = g.route_read("near")
+    assert serving == "home"
+    g.mark_down("home")
+    with pytest.raises(RegionDownError):
+        g.route_read("near")

@@ -9,6 +9,8 @@ scribble on what it was handed), and foreign/corrupt bytes must raise
 ``WireFormatError`` instead of decoding garbage.
 """
 
+import zlib
+
 import numpy as np
 import pytest
 
@@ -256,6 +258,17 @@ def test_decoded_arrays_are_read_only():
             assert not col.flags.writeable
 
 
+def _restamp_crc(data: bytes) -> bytes:
+    """Re-stamp the header checksum over a (mutated) frame, so structural
+    corruption reaches the decoder's parsing checks — the CRC would
+    otherwise reject the bytes first."""
+    h = wire._HEADER
+    magic, version, flags, batch_count, raw_len, _ = h.unpack(data[: h.size])
+    payload = data[h.size :]
+    crc = zlib.crc32(payload, zlib.crc32(h.pack(magic, version, flags, batch_count, raw_len, 0)))
+    return h.pack(magic, version, flags, batch_count, raw_len, crc) + payload
+
+
 def test_decode_rejects_foreign_and_corrupt_bytes():
     rng = np.random.default_rng(41)
     frame = wire.encode_batch(random_online_batch(rng, rows=4))
@@ -272,13 +285,73 @@ def test_decode_rejects_foreign_and_corrupt_bytes():
             random_online_batch(rng, seq=0),
             random_online_batch(rng, seq=1),
         ]).data)  # decode_batch wants exactly one
-    # corruption INSIDE the payload must also surface as WireFormatError,
-    # never leak numpy/unicode internals to the receiver
+    # structural corruption must ALSO surface as WireFormatError even when
+    # the checksum is valid (a malicious or buggy sender can stamp a
+    # correct CRC over garbage) — never leak numpy/unicode internals
     raw = wire.encode_batch(random_online_batch(rng, rows=4), compress_level=0)
     with pytest.raises(wire.WireFormatError, match="malformed"):
-        wire.decode_frame(raw.data.replace(b"<i8", b"<z8", 1))  # bad dtype tag
+        wire.decode_frame(_restamp_crc(raw.data.replace(b"<i8", b"<z8", 1)))
     with pytest.raises(wire.WireFormatError, match="malformed"):
-        wire.decode_frame(raw.data.replace(b"fs", b"\xff\xfe", 1))  # bad utf8
+        wire.decode_frame(_restamp_crc(raw.data.replace(b"fs", b"\xff\xfe", 1)))
+
+
+def test_checksum_rejects_single_byte_flips_anywhere():
+    """Any single flipped byte — header or payload, compressed or raw — is
+    rejected at the door, BEFORE zlib or record parsing runs.  This is the
+    gap the v1 wire had (magic/length checks passed silently-corrupted
+    payload arrays straight into replica state), and the gap a
+    payload-only checksum would keep: a flipped header bit nothing
+    validates, e.g. an undefined ``flags`` bit, decodes "successfully"."""
+    rng = np.random.default_rng(47)
+    batch = random_online_batch(rng, rows=64, d=4)
+    for level in (0, 6):
+        data = wire.encode_batch(batch, compress_level=level).data
+        h = wire._HEADER.size
+        # every header byte: magic/version flips get their own loud error,
+        # everything else (flags, counts, lengths, the crc itself) fails
+        # the frame checksum
+        for pos in range(h):
+            corrupted = data[:pos] + bytes([data[pos] ^ 0x40]) + data[pos + 1 :]
+            with pytest.raises(wire.WireFormatError):
+                wire.decode_frame(corrupted)
+        step = max(1, (len(data) - h) // 9)
+        for pos in range(h, len(data), step):
+            corrupted = data[:pos] + bytes([data[pos] ^ 0x40]) + data[pos + 1 :]
+            with pytest.raises(wire.WireFormatError, match="checksum"):
+                wire.decode_frame(corrupted)
+    # the specific v2-payload-only-crc escape: an undefined flags bit
+    flags_pos = 3  # <2sBBIQI: magic(0-1) version(2) flags(3)
+    data = wire.encode_batch(batch).data
+    bad = data[:flags_pos] + bytes([data[flags_pos] ^ 0x14]) + data[flags_pos + 1 :]
+    with pytest.raises(wire.WireFormatError, match="checksum"):
+        wire.decode_frame(bad)
+    # and even a correctly-stamped frame with undefined flag bits is a
+    # protocol error, not something to silently ignore
+    with pytest.raises(wire.WireFormatError, match="flag"):
+        wire.decode_frame(_restamp_crc(bad))
+
+
+def test_v1_frames_rejected_loudly():
+    """A checksum-less v1 frame must not decode on a v2 receiver: silent
+    corruption is worse than a loud version mismatch on a mixed link."""
+    rng = np.random.default_rng(53)
+    data = wire.encode_batch(random_online_batch(rng, rows=4)).data
+    v1 = data[:2] + b"\x01" + data[3:]
+    with pytest.raises(wire.WireFormatError, match="version"):
+        wire.decode_frame(v1)
+
+
+def test_probe_frame_roundtrip():
+    """The zero-batch probe is the smallest well-formed frame: header only,
+    decodes to no batches, and still carries a verifiable checksum."""
+    probe = wire.encode_probe()
+    assert probe.wire_nbytes == wire.HEADER_SIZE
+    assert probe.seqs == () and probe.rows == 0
+    assert probe.table == wire.PROBE_TABLE
+    assert wire.decode_frame(probe.data) == []
+    flipped = probe.data[:-1] + bytes([probe.data[-1] ^ 0x01])
+    with pytest.raises(wire.WireFormatError, match="checksum"):
+        wire.decode_frame(flipped)
 
 
 # -- transport end-to-end ------------------------------------------------------
