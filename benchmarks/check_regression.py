@@ -217,6 +217,51 @@ def check_chaos(
         print(f"  ok: chaos goodput {got} rows/s (calibrated floor {floor})")
 
 
+def check_socket(cur: dict, base: dict, failures: list[str]) -> None:
+    """Real-socket transport gates (ISSUE 8).  EXACT: the socket phase
+    ships the same seeded 100k-row window as the throughput bench, so its
+    wire-byte and frame counts are deterministic — and the serialized and
+    pipelined runs must ship identical bytes (pipelining is a scheduling
+    change, not a format change; the bench asserts that internally and
+    the counts are re-gated here).  ABSOLUTE: both convergence booleans
+    (online byte-identical / offline chunk-set-identical against the
+    daemon's dump stream) are re-asserted fresh, no frame may be NACKed
+    or timed out on the clean localhost link, and the pipelined drain
+    must beat the serialized (window=1) drain outright — the emulated
+    round-trip dominates both walls, so the ratio is a property of the
+    window, not of machine speed."""
+    c, b = cur["socket"], base["socket"]
+    for field in ("socket_state_identical", "socket_offline_state_identical"):
+        if not c.get(field):
+            failures.append(f"socket {field} is no longer asserted true")
+    for field in ("wire_frames", "shipped_bytes", "shipped_raw_bytes"):
+        got, want = c[field], b[field]
+        if got != want:
+            failures.append(
+                f"socket {field} drifted: {got} vs committed {want} "
+                f"(re-commit BENCH_geo_replication.json if intentional)"
+            )
+        else:
+            print(f"  ok: socket {field} {got} (exact match)")
+    for mode in ("serialized", "pipelined"):
+        if c[mode]["nacks"] or c[mode]["timeouts"]:
+            failures.append(
+                f"socket {mode} run was not clean: nacks="
+                f"{c[mode]['nacks']} timeouts={c[mode]['timeouts']}"
+            )
+    speedup = c["pipeline_speedup_x"]
+    if speedup <= 1.0:
+        failures.append(
+            f"pipelined drain no longer beats serialized: "
+            f"{speedup}x (committed {b['pipeline_speedup_x']}x)"
+        )
+    else:
+        print(
+            f"  ok: socket pipeline speedup {speedup}x over window=1 "
+            f"(committed {b['pipeline_speedup_x']}x)"
+        )
+
+
 def check_serving(
     cur: dict, base: dict, tolerance: float, scale: float, failures: list[str]
 ) -> None:
@@ -329,6 +374,7 @@ def main() -> None:
         geo_base = load_suite_result(Path(args.geo_baseline), "geo_replication")
         check_geo_replication(geo_cur, geo_base, args.tolerance, scale, failures)
         check_chaos(geo_cur, geo_base, args.tolerance, scale, failures)
+        check_socket(geo_cur, geo_base, failures)
     if args.serving_baseline:
         srv_cur = load_suite_result(Path(args.current), "serving")
         srv_base = load_suite_result(Path(args.serving_baseline), "serving")

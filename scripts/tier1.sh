@@ -21,11 +21,19 @@
 # CI (.github/workflows/ci.yml) runs this same script, so a regression
 # fails tier-1 locally and the workflow identically.
 # Set TIER1_SKIP_BENCH=1 to run tests only.
+#
+# Budget guard: --durations=15 prints the slowest tests on every run, so a
+# test drifting past its budget is visible in the log before it blows the
+# CI wall clock.  Tests that are structurally heavy carry pytest markers —
+# `slow` (wall-clock-heavy property/convergence sweeps) and `proc` (spawn
+# child processes) — and CI runs those lanes in a parallel job while the
+# main lane deselects them (-m "not slow and not proc"); a plain local
+# `scripts/tier1.sh` still runs everything.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-python -m pytest -x -q -p no:cacheprovider "$@"
+python -m pytest -x -q -p no:cacheprovider --durations=15 "$@"
 
 if [[ "${TIER1_SKIP_BENCH:-0}" != "1" ]]; then
   echo "=== tier-1 bench smoke (serving-path transfer guard) ==="

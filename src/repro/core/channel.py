@@ -91,12 +91,21 @@ class Delivery:
     (empty = dropped/partitioned, two entries = duplicated; a reordered
     frame arrives inside a LATER transmit's ``arrivals``).  ``ack_lost``
     means the frame applied but the acknowledgement never made it home —
-    observationally identical to a latency spike past the ack timeout."""
+    observationally identical to a latency spike past the ack timeout.
+
+    ``remote`` is set by out-of-process carriers (``core/daemon.py``'s
+    ``SocketChannel``): the replica daemon's ``wire.Ack`` receipt — the
+    seqs it applied, rows, and status.  For such carriers ``arrivals`` is
+    empty (the bytes left the process; nothing arrives locally) and the
+    publisher trusts the ack instead of applying anything itself.  Typed
+    as ``object`` because ``channel`` sits below ``wire`` in the import
+    order."""
 
     arrivals: tuple[bytes, ...]
     latency_ms: float
     ack_lost: bool = False
     faults: tuple[str, ...] = ()
+    remote: Optional[object] = None
 
 
 class Channel(Protocol):

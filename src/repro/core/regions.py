@@ -87,6 +87,16 @@ class GeoTopology:
         default_factory=dict
     )
     cross_region_gbps: float = 1.0
+    #: MEASURED per-link round-trip gauges (EWMA), fed by real carriers
+    #: (``core/daemon.py``'s ``SocketChannel`` observes every ack RTT).
+    #: Deliberately separate from the static ``latency()`` model: the
+    #: deterministic routing/shipping gates price the model, while these
+    #: gauges report what the wire actually did.
+    measured_rtt_ms: dict[tuple[str, str], float] = dataclasses.field(
+        default_factory=dict
+    )
+    #: EWMA smoothing factor for ``observe_rtt`` (weight of the new sample)
+    rtt_alpha: float = 0.2
 
     def latency(self, src: str, dst: str) -> float:
         if src == dst:
@@ -102,6 +112,29 @@ class GeoTopology:
         if src == dst:
             return 0.0
         return self.latency(src, dst) + nbytes * 8 / (self.cross_region_gbps * 1e6)
+
+    # -- measured link gauges ---------------------------------------------------
+    def observe_rtt(self, src: str, dst: str, rtt_ms: float) -> float:
+        """Fold one measured round-trip into the per-link EWMA gauge and
+        return the updated estimate.  Purely observational — ``latency()``
+        and ``transfer_ms()`` stay on the static model."""
+        key = (src, dst)
+        prev = self.measured_rtt_ms.get(key)
+        est = (
+            rtt_ms
+            if prev is None
+            else prev + self.rtt_alpha * (rtt_ms - prev)
+        )
+        self.measured_rtt_ms[key] = est
+        return est
+
+    def measured_latency(self, src: str, dst: str) -> Optional[float]:
+        """The link's measured RTT EWMA, or None when nothing real has
+        crossed it yet (symmetric lookup, like ``latency``)."""
+        for pair in ((src, dst), (dst, src)):
+            if pair in self.measured_rtt_ms:
+                return self.measured_rtt_ms[pair]
+        return None
 
     # -- health ----------------------------------------------------------------
     # Health lives on the topology so DETECTED failure (the delivery state

@@ -220,6 +220,13 @@ class DeliveryPolicy:
     #: consecutive failures before the replica is dropped from the set
     #: entirely (None = never; re-admission goes through rejoin/bootstrap)
     evict_after: Optional[int] = None
+    #: bounded in-flight window for pipelined draining over carriers that
+    #: support it (``post``/``collect`` — core/daemon.py's SocketChannel):
+    #: up to this many encoded frames ride the link un-acked at once, so
+    #: encode, socket transfer, and replica apply overlap.  1 serializes
+    #: (the in-process behavior); the log's out-of-order ack handling and
+    #: per-seq dedup are what make >1 safe.
+    inflight_window: int = 8
 
 
 @dataclasses.dataclass
@@ -509,6 +516,14 @@ class GeoReplicator:
         # offline plane is optional: a standalone online-only replicator
         # (benchmarks, tests) never publishes offline batches
         self.offline_stores: dict[str, OfflineStore] = {}
+        # OUT-OF-PROCESS replicas (core/daemon.py): region -> {"offline":
+        # bool}.  A remote replica has no entry in ``stores`` — its state
+        # lives in the daemon — so read routing and store-walking callers
+        # skip it automatically; its per-region carrier lives in
+        # ``channels`` (``channel`` stays the default for in-process
+        # replicas, preserving every deterministic gate bit for bit).
+        self.remote: dict[str, dict] = {}
+        self.channels: dict[str, Channel] = {}
         self.shipped: dict[str, dict] = {}
         self._specs: dict[tuple[str, int], FeatureSetSpec] = {}
         home_store.merge_listeners.append(self._on_home_merge)
@@ -584,7 +599,32 @@ class GeoReplicator:
 
     # -- replica membership --------------------------------------------------
     def replica_regions(self) -> list[str]:
-        return [r for r in self.stores if r != self.home_region]
+        out = [r for r in self.stores if r != self.home_region]
+        out.extend(r for r in self.remote if r not in out)
+        return out
+
+    def channel_for(self, region: str) -> Channel:
+        """The carrier for one replica link — a per-region channel (remote
+        replicas) or the shared default."""
+        return self.channels.get(region, self.channel)
+
+    def _new_ship_ledger(self) -> dict:
+        # "bytes" is the TRUE wire size (post-compression frame bytes, the
+        # size the WAN bandwidth model prices); "raw_bytes" the serialized
+        # payload before compression; "frames" counts wire messages (a
+        # coalesced frame carries several batches)
+        return {
+            "frames": 0,
+            "batches": 0,
+            "rows": 0,
+            "bytes": 0,
+            "raw_bytes": 0,
+            "ms": 0.0,
+            "by_plane": {
+                p: {"frames": 0, "batches": 0, "rows": 0, "bytes": 0, "raw_bytes": 0}
+                for p in ("online", "offline")
+            },
+        }
 
     def add_replica(
         self,
@@ -620,22 +660,47 @@ class GeoReplicator:
             self.offline_stores[region] = offline_store
         cut = self.log.register_replica(region)
         self.delivery[region] = DeliveryState()
-        # "bytes" is the TRUE wire size (post-compression frame bytes, the
-        # size the WAN bandwidth model prices); "raw_bytes" the serialized
-        # payload before compression; "frames" counts wire messages (a
-        # coalesced frame carries several batches)
-        self.shipped[region] = {
-            "frames": 0,
-            "batches": 0,
-            "rows": 0,
-            "bytes": 0,
-            "raw_bytes": 0,
-            "ms": 0.0,
-            "by_plane": {
-                p: {"frames": 0, "batches": 0, "rows": 0, "bytes": 0, "raw_bytes": 0}
-                for p in ("online", "offline")
-            },
-        }
+        self.shipped[region] = self._new_ship_ledger()
+        return cut
+
+    def add_remote_replica(
+        self,
+        region: str,
+        channel: Channel,
+        *,
+        offline: Optional[bool] = None,
+    ) -> int:
+        """Start tracking an OUT-OF-PROCESS replica reached over its own
+        carrier (core/daemon.py's ``SocketChannel``): frames ship through
+        ``channel``, the daemon applies and acks, and the publisher trusts
+        the acks instead of applying anything locally.  The replica set
+        stays plane-homogeneous with the home (``offline`` defaults to
+        whatever the home publishes).  Returns the registration cut, like
+        ``add_replica``."""
+        if region in self.stores or region in self.remote:
+            raise ValueError(f"region {region} already has a store")
+        home_offline = self.home_region in self.offline_stores
+        if offline is None:
+            offline = home_offline
+        if not offline and home_offline:
+            raise ValueError(
+                f"home {self.home_region} replicates the offline plane; "
+                f"remote replica {region} must carry it too"
+            )
+        if offline and not home_offline:
+            raise ValueError(
+                f"home {self.home_region} does not replicate the offline "
+                f"plane; remote replica {region} cannot"
+            )
+        self.remote[region] = {"offline": bool(offline)}
+        self.channels[region] = channel
+        # the carrier's own ack wait must not outlast the policy's notion
+        # of "timed out", or the state machine would never see timeouts
+        if hasattr(channel, "ack_timeout_ms"):
+            channel.ack_timeout_ms = float(self.policy.ack_timeout_ms)
+        cut = self.log.register_replica(region)
+        self.delivery[region] = DeliveryState()
+        self.shipped[region] = self._new_ship_ledger()
         return cut
 
     def bootstrap_delta(
@@ -658,12 +723,14 @@ class GeoReplicator:
         out = {"online_rows": 0, "offline_rows": 0, "chunks": 0}
         home_online = self.stores[self.home_region]
         store = self.stores.get(region)
+        is_remote = region in self.remote
         if (
-            store is not None
+            (store is not None or is_remote)
             and spec.materialization.online_enabled
             and home_online.has(spec.name, spec.version)
         ):
-            store.register(spec)
+            if store is not None:
+                store.register(spec)
             dump = home_online.dump_all(spec.name, spec.version)
             if len(dump):
                 keys = dump["__key__"]
@@ -687,13 +754,15 @@ class GeoReplicator:
                         out["chunks"] += 1
         home_offline = self.offline_stores.get(self.home_region)
         offline = self.offline_stores.get(region)
+        remote_offline = is_remote and self.remote[region]["offline"]
         if (
-            offline is not None
+            (offline is not None or remote_offline)
             and home_offline is not None
             and spec.materialization.offline_enabled
             and home_offline.has(spec.name, spec.version)
         ):
-            offline.register(spec)
+            if offline is not None:
+                offline.register(spec)
             for chunk in home_offline.export_chunks(
                 spec.name, spec.version, max_rows=chunk_rows
             ):
@@ -756,32 +825,23 @@ class GeoReplicator:
             spec, batch.keys, batch.event_ts, batch.values, batch.creation_ts
         )
 
-    def _ship_frame(self, region: str, frame) -> Optional[list[dict]]:
-        """The WAN hop: transmit one encoded ``wire.WireFrame`` over the
-        channel, decode and apply every payload that arrives, and ack each
-        applied logged seq IF the acknowledgement made it back in time.
-        Returns the per-batch apply stats, or None when the delivery
-        failed (nothing decodable arrived, or the ack was lost/late) — the
-        caller's cue to back off and retry; un-acked batches stay pending.
-
-        Accounting is split by side and is exception-safe: the TRANSMIT
-        ledger (frames/bytes/ms) is charged up front — the home pays for
-        the send whether or not it lands, so retries show up as byte
-        amplification — while the APPLY ledger (batches/rows) is recorded
-        in a ``finally`` per batch actually applied, so a replica-side
-        apply error mid-frame still accounts the earlier batches it acked
-        before the exception propagates."""
-        st = self.delivery[region]
-        delivery = self.channel.transmit(self.home_region, region, frame)
+    def _charge_transmit(self, region: str, frame, latency_ms: float) -> None:
+        """TRANSMIT-side ledger: the home pays for the send whether or not
+        it lands, so retries show up as byte amplification."""
         ship = self.shipped[region]
         ship["frames"] += 1
         ship["bytes"] += frame.wire_nbytes
         ship["raw_bytes"] += frame.raw_nbytes
-        ship["ms"] += delivery.latency_ms
+        ship["ms"] += latency_ms
         plane = ship["by_plane"][frame.plane]
         plane["frames"] += 1
         plane["bytes"] += frame.wire_nbytes
         plane["raw_bytes"] += frame.raw_nbytes
+
+    def _note_sent_seqs(self, region: str, frame) -> None:
+        """Retry detection: any logged seq at or below the high-water mark
+        has been transmitted before."""
+        st = self.delivery[region]
         resent = sum(
             1
             for s in frame.seqs
@@ -794,6 +854,113 @@ class GeoReplicator:
         for s in frame.seqs:
             if s != wire.BOOTSTRAP_SEQ and s > st.max_seq_sent:
                 st.max_seq_sent = s
+
+    def _announce_tables(self, region: str, frame) -> None:
+        """Remote carriers need the table's schema before its first frame
+        (specs carry user code that never crosses the wire); idempotent —
+        the channel remembers what it has announced."""
+        if frame.table == wire.PROBE_TABLE:
+            return
+        ch = self.channel_for(region)
+        ensure = getattr(ch, "ensure_table", None)
+        spec = self._specs.get(frame.table)
+        if ensure is not None and spec is not None:
+            ensure(spec)
+
+    def _absorb_remote(self, region: str, frame, delivery) -> Optional[list[dict]]:
+        """Digest a remote carrier's delivery: the replica daemon applied
+        the frame itself, so the publisher's whole apply step reduces to
+        trusting (or not) the returned ``wire.Ack`` — same contract as the
+        in-process path: per-batch stats on success, None on failure (the
+        state machine's cue), ledger charged for what the ack proves was
+        applied even when the ack itself came back unusable."""
+        st = self.delivery[region]
+        ack = delivery.remote
+        ack_ok = (
+            not delivery.ack_lost
+            and delivery.latency_ms <= self.policy.ack_timeout_ms
+        )
+        if ack is None:
+            st.timeouts += 1
+            if self.monitor is not None:
+                self.monitor.record_delivery_fault(region, "timeout")
+            return None
+        if ack.status == wire.ACK_CORRUPT:
+            # the daemon's CRC rejected the frame at its door — the
+            # remote mirror of the local corrupt-arrival path
+            st.corrupt_frames += 1
+            st.timeouts += 1
+            if self.monitor is not None:
+                self.monitor.record_delivery_fault(region, "corrupt_frame")
+                self.monitor.record_delivery_fault(region, "timeout")
+            return None
+        for s in ack.seqs:
+            if s != wire.BOOTSTRAP_SEQ and self.log.is_acked(region, s):
+                st.redelivered_batches += 1
+                if self.monitor is not None:
+                    self.monitor.record_delivery_fault(region, "redelivered")
+        if ack_ok:
+            for s in ack.seqs:
+                if s != wire.BOOTSTRAP_SEQ:
+                    self.log.ack(region, s)
+        ship = self.shipped[region]
+        plane = ship["by_plane"][frame.plane]
+        ship["batches"] += len(ack.seqs)
+        ship["rows"] += ack.rows
+        plane["batches"] += len(ack.seqs)
+        plane["rows"] += ack.rows
+        if self.monitor is not None:
+            self.monitor.record_replication_ship(
+                ack.rows,
+                batches=len(ack.seqs),
+                raw_nbytes=frame.raw_nbytes,
+                wire_nbytes=frame.wire_nbytes,
+                plane=frame.plane,
+            )
+            self.monitor.system.observe(
+                f"replication/socket_rtt_ms/{region}", delivery.latency_ms
+            )
+        if not ack_ok or ack.status != wire.ACK_OK:
+            st.timeouts += 1
+            if self.monitor is not None:
+                self.monitor.record_delivery_fault(region, "timeout")
+            return None
+        return [{"remote": True, "seq": s} for s in ack.seqs]
+
+    def _ship_frame(self, region: str, frame) -> Optional[list[dict]]:
+        """The WAN hop: transmit one encoded ``wire.WireFrame`` over the
+        channel, decode and apply every payload that arrives, and ack each
+        applied logged seq IF the acknowledgement made it back in time.
+        Returns the per-batch apply stats, or None when the delivery
+        failed (nothing decodable arrived, or the ack was lost/late) — the
+        caller's cue to back off and retry; un-acked batches stay pending.
+
+        For a REMOTE replica the apply happens in the daemon process: the
+        carrier returns its ack in ``delivery.remote`` and ``_absorb_remote``
+        digests it — the ``DeliveryState`` machine above cannot tell the
+        difference.
+
+        Accounting is split by side and is exception-safe: the TRANSMIT
+        ledger (frames/bytes/ms) is charged up front — the home pays for
+        the send whether or not it lands, so retries show up as byte
+        amplification — while the APPLY ledger (batches/rows) is recorded
+        in a ``finally`` per batch actually applied, so a replica-side
+        apply error mid-frame still accounts the earlier batches it acked
+        before the exception propagates."""
+        st = self.delivery[region]
+        if region in self.remote:
+            self._announce_tables(region, frame)
+            delivery = self.channel_for(region).transmit(
+                self.home_region, region, frame
+            )
+            self._charge_transmit(region, frame, delivery.latency_ms)
+            self._note_sent_seqs(region, frame)
+            return self._absorb_remote(region, frame, delivery)
+        delivery = self.channel.transmit(self.home_region, region, frame)
+        self._charge_transmit(region, frame, delivery.latency_ms)
+        self._note_sent_seqs(region, frame)
+        ship = self.shipped[region]
+        plane = ship["by_plane"][frame.plane]
         ack_ok = (
             not delivery.ack_lost
             and delivery.latency_ms <= self.policy.ack_timeout_ms
@@ -856,6 +1023,80 @@ class GeoReplicator:
             raise DeliveryError(f"batch seq {batch.seq} undelivered to {region}")
         return stats[0]
 
+    def _drain_remote_pipelined(
+        self, region: str, pend: list[ReplicatedBatch], encoded: dict
+    ) -> tuple[int, int, bool, bool]:
+        """Drain one REMOTE replica with a bounded in-flight window: keep
+        up to ``policy.inflight_window`` encoded frames riding the carrier
+        un-acked, absorbing acks as they land, so encode, socket transfer,
+        and replica apply overlap instead of serializing.  Safe because
+        the log acks out of order (contiguous-prefix cursor advance) and
+        the daemon's apply is idempotent per seq — a frame that times out
+        mid-window just stays pending and is re-shipped next pass.
+        Returns (applied_batches, rows, shipped_any, failed)."""
+        ch = self.channel_for(region)
+        st = self.delivery[region]
+        window = max(1, self.policy.inflight_window)
+        runs = wire.coalesce(pend)
+        idx = 0
+        inflight: dict[int, tuple[object, object]] = {}
+        applied_batches = 0
+        rows = 0
+        shipped_any = False
+        failed = False
+        while (idx < len(runs) and not failed) or inflight:
+            while idx < len(runs) and len(inflight) < window and not failed:
+                run = runs[idx]
+                idx += 1
+                key = (run[0].plane, run[0].table, tuple(b.seq for b in run))
+                frame = encoded.get(key)
+                if frame is None:
+                    frame = wire.encode_run(run, compress_level=self.compress_level)
+                    encoded[key] = frame
+                self._announce_tables(region, frame)
+                self._charge_transmit(region, frame, 0.0)
+                self._note_sent_seqs(region, frame)
+                token = ch.post(frame)
+                if token is None:
+                    # the injector ate the send before it hit the socket:
+                    # a delivery failure — stop posting new frames but
+                    # keep collecting the window already in flight
+                    st.timeouts += 1
+                    if self.monitor is not None:
+                        self.monitor.record_delivery_fault(region, "timeout")
+                    failed = True
+                else:
+                    inflight[id(token)] = (token, frame)
+            if not inflight:
+                break
+            done = ch.collect(self.policy.ack_timeout_ms)
+            if not done:
+                # nothing completed within the ack timeout: every frame
+                # still in flight is charged as timed out and abandoned
+                # (a late ack resolves the identical retry next pass)
+                for token, _frame in inflight.values():
+                    ch.forget(token)
+                    st.timeouts += 1
+                    if self.monitor is not None:
+                        self.monitor.record_delivery_fault(region, "timeout")
+                inflight.clear()
+                failed = True
+                break
+            for token, delivery in done:
+                entry = inflight.pop(id(token), None)
+                if entry is None:
+                    continue  # completion for a frame another pass forgot
+                _tok, frame = entry
+                self.shipped[region]["ms"] += delivery.latency_ms
+                stats = self._absorb_remote(region, frame, delivery)
+                if stats is None:
+                    failed = True
+                else:
+                    shipped_any = True
+                    applied_batches += len(stats)
+                    rows += frame.rows
+        return applied_batches, rows, shipped_any, failed
+
     def drain(
         self,
         region: Optional[str] = None,
@@ -909,29 +1150,43 @@ class GeoReplicator:
             pend = self.log.pending(r)
             if max_batches is not None:
                 pend = pend[:max_batches]
-            rows = 0
-            applied_batches = 0
-            shipped_any = False
-            failed = False
-            for run in wire.coalesce(pend):
-                # exact seq tuple, not a (first, last) range: out-of-order
-                # acks can punch holes in one replica's pending run, and a
-                # range key would collide it with another replica's gapless
-                # run over the same span
-                key = (run[0].plane, run[0].table, tuple(b.seq for b in run))
-                frame = encoded.get(key)
-                if frame is None:
-                    frame = wire.encode_run(run, compress_level=self.compress_level)
-                    encoded[key] = frame
-                stats = self._ship_frame(r, frame)
-                if stats is None:
-                    self._record_failure(r)
-                    failed = True
-                    break
-                shipped_any = True
-                applied_batches += len(stats)
-                rows += frame.rows
-            if not failed and shipped_any:
+            ch = self.channel_for(r)
+            if (
+                r in self.remote
+                and self.policy.inflight_window > 1
+                and hasattr(ch, "post")
+                and hasattr(ch, "collect")
+            ):
+                applied_batches, rows, shipped_any, failed = (
+                    self._drain_remote_pipelined(r, pend, encoded)
+                )
+            else:
+                rows = 0
+                applied_batches = 0
+                shipped_any = False
+                failed = False
+                for run in wire.coalesce(pend):
+                    # exact seq tuple, not a (first, last) range:
+                    # out-of-order acks can punch holes in one replica's
+                    # pending run, and a range key would collide it with
+                    # another replica's gapless run over the same span
+                    key = (run[0].plane, run[0].table, tuple(b.seq for b in run))
+                    frame = encoded.get(key)
+                    if frame is None:
+                        frame = wire.encode_run(
+                            run, compress_level=self.compress_level
+                        )
+                        encoded[key] = frame
+                    stats = self._ship_frame(r, frame)
+                    if stats is None:
+                        failed = True
+                        break
+                    shipped_any = True
+                    applied_batches += len(stats)
+                    rows += frame.rows
+            if failed:
+                self._record_failure(r)
+            elif shipped_any:
                 self._record_success(r)
             out[r] = {"applied_batches": applied_batches, "applied_rows": rows}
             if r in self.delivery:  # a failure may have evicted r
@@ -1023,6 +1278,8 @@ class GeoReplicator:
             raise ValueError("cannot evict the home region")
         self.stores.pop(region, None)
         self.offline_stores.pop(region, None)
+        self.remote.pop(region, None)
+        self.channels.pop(region, None)
         self.shipped.pop(region, None)
         self.delivery.pop(region, None)
         self.log.drop_replica(region)
@@ -1067,6 +1324,51 @@ class GeoReplicator:
             self.monitor.record_replication_lag(region, **self.lag(region))
 
     # -- fail-over replay -------------------------------------------------------
+    def _adopt_remote(self, region: str) -> None:
+        """Materialize a remote replica's daemon-held state into fresh
+        in-process stores (the ``bootstrap_delta`` rebuild pattern run in
+        reverse: dump chunks -> ``merge_reduced``/``apply_chunks``) and
+        move the region from the remote set into the local store map.
+        ``dump_all`` order is the sorted key index, so the rebuilt online
+        store is byte-identical to what an in-process replica would hold;
+        offline chunks rebuild through full-key dedup, so the canonical
+        history matches chunk-set-identically."""
+        ch = self.channels[region]
+        home = self.stores[self.home_region]
+        store = OnlineStore(
+            home.num_partitions,
+            home.initial_capacity,
+            interpret=home.interpret,
+            merge_engine=home.merge_engine,
+        )
+        home_off = self.offline_stores.get(self.home_region)
+        off: Optional[OfflineStore] = None
+        if self.remote[region]["offline"] and home_off is not None:
+            off = OfflineStore(
+                home_off.num_shards,
+                home_off.time_partition,
+                merge_engine=home_off.merge_engine,
+                compact_threshold=home_off.compact_threshold,
+            )
+        for spec in list(self._specs.values()):
+            if spec.materialization.online_enabled:
+                store.register(spec)
+                for b in ch.fetch_dump(spec, "online"):
+                    store.merge_reduced(
+                        spec, b.keys, b.event_ts, b.values, b.creation_ts
+                    )
+            if off is not None and spec.materialization.offline_enabled:
+                off.register(spec)
+                for b in ch.fetch_dump(spec, "offline"):
+                    cols = dict(b.columns or {})
+                    creation = cols.pop(CREATION_TS, b.creation_ts)
+                    off.apply_chunks(spec, b.keys, b.event_ts, creation, cols)
+        self.stores[region] = store
+        if off is not None:
+            self.offline_stores[region] = off
+        self.remote.pop(region, None)
+        self.channels.pop(region, None)
+
     def promote(self, region: str) -> dict:
         """Data-plane half of fail-over: replay the promoted replica's
         un-acked log suffix into its stores — BOTH planes (per-plane
@@ -1078,7 +1380,7 @@ class GeoReplicator:
         (``GeoFeatureStore.rejoin``)."""
         if region == self.home_region:
             return {"replayed_batches": 0, "replayed_rows": 0}
-        if region not in self.stores:
+        if region not in self.stores and region not in self.remote:
             raise RegionDownError(f"no replica store in {region}")
         # the replay MUST complete — a promoted home missing acked-elsewhere
         # suffix batches would diverge forever — so push through channel
@@ -1096,6 +1398,11 @@ class GeoReplicator:
                 f"promotion replay for {region} did not converge within "
                 f"{self.policy.promote_rounds} forced drains"
             )
+        if region in self.remote:
+            # the promoted replica's state lives in a daemon process; a
+            # home must publish from in-process stores, so adopt the
+            # daemon's (now fully converged) state before the swap
+            self._adopt_remote(region)
         old_home_region = self.home_region
         old_home = self.stores[self.home_region]
         try:

@@ -69,6 +69,7 @@ would have acked un-coalesced.
 from __future__ import annotations
 
 import dataclasses
+import json
 import struct
 import zlib
 from typing import Iterable, Optional, Sequence
@@ -82,16 +83,28 @@ import numpy as np
 from repro.core.replication import DEFAULT_COMPRESS_LEVEL, ReplicatedBatch
 
 __all__ = [
+    "ACK_APPLY_ERROR",
+    "ACK_CORRUPT",
+    "ACK_OK",
+    "Ack",
     "DEFAULT_COMPRESS_LEVEL",
     "HEADER_SIZE",
+    "MAX_MESSAGE_BYTES",
+    "StreamDecoder",
+    "StreamEvent",
     "WireFrame",
     "WireFormatError",
     "coalesce",
+    "decode_ack",
     "decode_batch",
+    "decode_control",
     "decode_frame",
+    "encode_ack",
     "encode_batch",
+    "encode_control",
     "encode_probe",
     "encode_run",
+    "frame_message",
 ]
 
 MAGIC = b"FW"
@@ -401,3 +414,229 @@ def coalesce(
         else:
             runs.append([b])
     return runs
+
+
+# -- stream framing -----------------------------------------------------------
+#
+# A WireFrame is self-checksummed but NOT self-delimiting: the v2 header
+# carries the RAW payload length, not the post-compression length, so a
+# byte stream of concatenated frames cannot be split without decompressing.
+# The socket carrier (core/daemon.py) therefore wraps every message in a
+# u32 little-endian length prefix:
+#
+#     u32 payload_len | payload
+#
+# and the payload's first two bytes name its kind:
+#
+#     "FW"  a wire frame (header + payload as produced by encode_run)
+#     "FC"  a control message: "FC" | u32 crc32(body) | body (UTF-8 JSON)
+#     "FA"  an ack:            "FA" | u32 crc32(body) | body (see _ACK_HEAD)
+#
+# StreamDecoder reassembles messages from arbitrary recv() chunkings —
+# partial reads, messages split across chunks, many messages in one chunk —
+# and stays on the air through damage: a message whose envelope is intact
+# but whose checksum rejects is surfaced as a "corrupt" event (the
+# publisher-visible NACK path), while a torn envelope (bad length or
+# unknown magic) triggers a resync scan to the next plausible message
+# boundary, counting the bytes skipped.
+
+CONTROL_MAGIC = b"FC"
+ACK_MAGIC = b"FA"
+_STREAM_MAGICS = (MAGIC, CONTROL_MAGIC, ACK_MAGIC)
+#: envelope sanity bound — a length prefix beyond this is treated as framing
+#: damage (resync), not as a request to buffer gigabytes
+MAX_MESSAGE_BYTES = 1 << 28
+
+#: ack status codes: OK (all batches applied), CORRUPT (frame checksum or
+#: structure rejected — the publisher's crc_rejected path), APPLY_ERROR
+#: (frame decoded but a batch failed to apply; ``seqs`` holds the applied
+#: prefix so prefix acks are never lost)
+ACK_OK = 0
+ACK_CORRUPT = 1
+ACK_APPLY_ERROR = 2
+
+#: u8 status | u32 msg_crc (crc32 of the message payload being acked,
+#: exactly as received — the correlation token) | i64 rows | u32 n_seqs
+_ACK_HEAD = struct.Struct("<BIqI")
+
+
+@dataclasses.dataclass(frozen=True)
+class Ack:
+    """A replica's receipt for one stream message.
+
+    ``msg_crc`` echoes crc32 of the exact payload bytes the replica
+    received, which is how the publisher correlates acks to in-flight
+    sends (retried frames re-encode to identical bytes, so a late ack
+    from a timed-out send resolves the retry — the log's per-seq dedup
+    makes that safe)."""
+
+    status: int
+    msg_crc: int
+    rows: int
+    seqs: tuple[int, ...]
+
+    @property
+    def ok(self) -> bool:
+        return self.status == ACK_OK
+
+
+def frame_message(payload: bytes) -> bytes:
+    """Wrap one message payload in the u32 length-prefix envelope."""
+    if len(payload) < 2 or len(payload) > MAX_MESSAGE_BYTES:
+        raise WireFormatError(f"message payload of {len(payload)} bytes")
+    return _U32.pack(len(payload)) + payload
+
+
+def encode_ack(status: int, msg_crc: int, rows: int, seqs: Sequence[int]) -> bytes:
+    """Encode an ack message payload (pass through ``frame_message``)."""
+    body = _ACK_HEAD.pack(status, msg_crc & 0xFFFFFFFF, rows, len(seqs))
+    body += struct.pack(f"<{len(seqs)}q", *seqs)
+    return ACK_MAGIC + _U32.pack(zlib.crc32(body)) + body
+
+
+def decode_ack(payload: bytes) -> Ack:
+    if payload[:2] != ACK_MAGIC:
+        raise WireFormatError(f"bad ack magic {payload[:2]!r}")
+    (crc,) = _U32.unpack_from(payload, 2)
+    body = payload[6:]
+    if zlib.crc32(body) != crc:
+        raise WireFormatError("ack checksum mismatch")
+    if len(body) < _ACK_HEAD.size:
+        raise WireFormatError("truncated ack body")
+    status, msg_crc, rows, n_seqs = _ACK_HEAD.unpack_from(body, 0)
+    want = _ACK_HEAD.size + 8 * n_seqs
+    if len(body) != want:
+        raise WireFormatError(f"ack body {len(body)} bytes, expected {want}")
+    seqs = struct.unpack_from(f"<{n_seqs}q", body, _ACK_HEAD.size)
+    return Ack(status=status, msg_crc=msg_crc, rows=rows, seqs=tuple(seqs))
+
+
+def encode_control(obj: dict) -> bytes:
+    """Encode a control message payload (JSON body, crc-protected)."""
+    body = json.dumps(obj, sort_keys=True, separators=(",", ":")).encode()
+    return CONTROL_MAGIC + _U32.pack(zlib.crc32(body)) + body
+
+
+def decode_control(payload: bytes) -> dict:
+    if payload[:2] != CONTROL_MAGIC:
+        raise WireFormatError(f"bad control magic {payload[:2]!r}")
+    (crc,) = _U32.unpack_from(payload, 2)
+    body = payload[6:]
+    if zlib.crc32(body) != crc:
+        raise WireFormatError("control checksum mismatch")
+    try:
+        obj = json.loads(body.decode())
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise WireFormatError(f"malformed control body: {e}") from None
+    if not isinstance(obj, dict):
+        raise WireFormatError("control body must be a JSON object")
+    return obj
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamEvent:
+    """One decoded stream message (or the carcass of a corrupted one).
+
+    ``kind`` is "frame" / "control" / "ack" / "corrupt"; exactly one of
+    ``batches`` / ``control`` / ``ack`` is set for the first three.
+    ``msg_crc`` is crc32 of the payload AS RECEIVED — for corrupt events
+    it identifies the damaged message so the receiver can NACK it."""
+
+    kind: str
+    msg_crc: int
+    nbytes: int
+    batches: Optional[list[ReplicatedBatch]] = None
+    control: Optional[dict] = None
+    ack: Optional[Ack] = None
+    error: Optional[str] = None
+
+
+def _plausible_length(n: int) -> bool:
+    return 2 <= n <= MAX_MESSAGE_BYTES
+
+
+class StreamDecoder:
+    """Incremental message reassembly over an unreliable byte stream.
+
+    Feed it whatever ``recv`` returns; it yields complete messages and
+    never raises on damage.  Counters: ``messages`` (complete envelopes
+    consumed), ``corrupt_messages`` (intact envelope, rejected payload),
+    ``resyncs`` / ``skipped_bytes`` (torn envelopes scanned past)."""
+
+    def __init__(self) -> None:
+        self._buf = bytearray()
+        self.messages = 0
+        self.corrupt_messages = 0
+        self.resyncs = 0
+        self.skipped_bytes = 0
+
+    @property
+    def buffered_bytes(self) -> int:
+        return len(self._buf)
+
+    def feed(self, data: bytes) -> list[StreamEvent]:
+        self._buf += data
+        events: list[StreamEvent] = []
+        while True:
+            ev = self._next()
+            if ev is None:
+                break
+            if ev is not _NO_EVENT:
+                events.append(ev)
+        return events
+
+    def _next(self):
+        buf = self._buf
+        if len(buf) < 4:
+            return None
+        (n,) = _U32.unpack_from(buf, 0)
+        if not _plausible_length(n):
+            return self._resync()
+        if len(buf) >= 6 and bytes(buf[4:6]) not in _STREAM_MAGICS:
+            return self._resync()
+        if len(buf) < 4 + n:
+            return None
+        payload = bytes(buf[4 : 4 + n])
+        del buf[: 4 + n]
+        self.messages += 1
+        return self._dispatch(payload)
+
+    def _dispatch(self, payload: bytes) -> StreamEvent:
+        crc = zlib.crc32(payload)
+        magic = payload[:2]
+        try:
+            if magic == MAGIC:
+                return StreamEvent(
+                    "frame", crc, len(payload), batches=decode_frame(payload)
+                )
+            if magic == CONTROL_MAGIC:
+                return StreamEvent(
+                    "control", crc, len(payload), control=decode_control(payload)
+                )
+            return StreamEvent("ack", crc, len(payload), ack=decode_ack(payload))
+        except WireFormatError as e:
+            self.corrupt_messages += 1
+            return StreamEvent("corrupt", crc, len(payload), error=str(e))
+
+    def _resync(self):
+        """The envelope itself is torn: scan forward for the next offset
+        that looks like a message boundary (plausible u32 length followed
+        by a known magic) and drop everything before it."""
+        buf = self._buf
+        self.resyncs += 1
+        for i in range(1, len(buf) - 5):
+            (n,) = _U32.unpack_from(buf, i)
+            if _plausible_length(n) and bytes(buf[i + 4 : i + 6]) in _STREAM_MAGICS:
+                self.skipped_bytes += i
+                del buf[:i]
+                return _NO_EVENT
+        # no boundary in sight: keep a 5-byte tail (a prefix of the next
+        # envelope may straddle the chunk edge) and wait for more bytes
+        keep = min(len(buf), 5)
+        self.skipped_bytes += len(buf) - keep
+        del buf[: len(buf) - keep]
+        return None
+
+
+#: sentinel: the decoder made progress (dropped garbage) without yielding
+_NO_EVENT = StreamEvent("none", 0, 0)

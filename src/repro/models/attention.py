@@ -157,7 +157,11 @@ def init_kv_cache(
 
     window_cache=True allocates a ring buffer of the sliding window size —
     the sub-quadratic memory plan for local layers at 500k context."""
-    size = min(max_len, cfg.sliding_window) if window_cache and cfg.sliding_window else max_len
+    size = (
+        min(max_len, cfg.sliding_window)
+        if window_cache and cfg.sliding_window
+        else max_len
+    )
     kv, hd = cfg.num_kv_heads, cfg.head_dim
     return {
         "k": jnp.zeros((batch, size, kv, hd), dtype),

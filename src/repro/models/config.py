@@ -144,12 +144,18 @@ class ModelConfig:
         if self.use_mla:
             q = (
                 d * self.q_lora_rank
-                + self.q_lora_rank * self.num_heads * (self.qk_nope_dim + self.qk_rope_dim)
+                + self.q_lora_rank
+                * self.num_heads
+                * (self.qk_nope_dim + self.qk_rope_dim)
                 if self.q_lora_rank
                 else d * self.num_heads * (self.qk_nope_dim + self.qk_rope_dim)
             )
             kv_a = d * (self.kv_lora_rank + self.qk_rope_dim)
-            kv_b = self.kv_lora_rank * self.num_heads * (self.qk_nope_dim + self.v_head_dim)
+            kv_b = (
+                self.kv_lora_rank
+                * self.num_heads
+                * (self.qk_nope_dim + self.v_head_dim)
+            )
             out = self.num_heads * self.v_head_dim * d
             return q + kv_a + kv_b + out
         q = d * self.num_heads * self.head_dim
@@ -189,7 +195,9 @@ class ModelConfig:
                 expert = self._ffn_params(self.moe_d_ff)
                 total += self.num_experts * expert + self.num_shared_experts * expert
                 total += d * self.num_experts  # router
-                active += (self.top_k + self.num_shared_experts) * expert + d * self.num_experts
+                active += (
+                    self.top_k + self.num_shared_experts
+                ) * expert + d * self.num_experts
             elif self.d_ff and not self.ssm:
                 # mamba layers have no separate FFN; for hybrids d_ff sizes
                 # only the shared attention block's MLP (counted below)
@@ -207,7 +215,9 @@ class ModelConfig:
 
         if self.encoder_decoder:
             # encoder self-attn + ffn, decoder cross-attn already in layers
-            enc = self.encoder_layers * (self._attn_params() + self._ffn_params(self.d_ff))
+            enc = self.encoder_layers * (
+                self._attn_params() + self._ffn_params(self.d_ff)
+            )
             cross = self.num_layers * self._attn_params()
             total += enc + cross
             active += enc + cross

@@ -165,7 +165,9 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
     }
 
 
-def precompute_cross(params: dict, memory: jnp.ndarray, cfg: ModelConfig, cache: dict) -> dict:
+def precompute_cross(
+    params: dict, memory: jnp.ndarray, cfg: ModelConfig, cache: dict
+) -> dict:
     b, t = memory.shape[:2]
     h, hd = cfg.num_heads, cfg.head_dim
 

@@ -65,7 +65,9 @@ def layer_norm(
 
 
 # -- rotary position embeddings ------------------------------------------------
-def rope(positions: jnp.ndarray, dim: int, theta: float) -> tuple[jnp.ndarray, jnp.ndarray]:
+def rope(
+    positions: jnp.ndarray, dim: int, theta: float
+) -> tuple[jnp.ndarray, jnp.ndarray]:
     """positions (...,) -> (cos, sin) of shape (..., dim//2), float32."""
     freqs = jnp.exp(
         -math.log(theta) * jnp.arange(0, dim, 2, dtype=jnp.float32) / dim

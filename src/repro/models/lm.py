@@ -34,7 +34,14 @@ from repro.models.layers import dense_init, mlp_apply, mlp_init, rms_norm
 from repro.models.losses import next_token_loss, softmax_cross_entropy
 from repro.models.pspec import BATCH, constrain, scan_unroll
 
-__all__ = ["init_params", "forward", "train_loss", "init_cache", "prefill", "decode_step"]
+__all__ = [
+    "init_params",
+    "forward",
+    "train_loss",
+    "init_cache",
+    "prefill",
+    "decode_step",
+]
 
 
 # =============================================================================
@@ -192,7 +199,9 @@ def _global_flags(cfg: ModelConfig, n: int, offset: int = 0) -> jnp.ndarray:
     )
 
 
-def _embed_inputs(params, cfg: ModelConfig, batch: dict) -> tuple[jnp.ndarray, jnp.ndarray]:
+def _embed_inputs(
+    params, cfg: ModelConfig, batch: dict
+) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Token (+ optional vision-prefix) embedding.  Returns (x, positions)."""
     cdt = jnp.dtype(cfg.compute_dtype)
     tok = params["embed"][batch["tokens"]].astype(cdt)
@@ -205,7 +214,9 @@ def _embed_inputs(params, cfg: ModelConfig, batch: dict) -> tuple[jnp.ndarray, j
     return x, positions
 
 
-def forward(params: dict, batch: dict, cfg: ModelConfig) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+def forward(
+    params: dict, batch: dict, cfg: ModelConfig
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Full-sequence forward.  Returns (hidden (B,S,D), logits, aux_loss)."""
     x, positions = _embed_inputs(params, cfg, batch)
     x = constrain(x, BATCH, None, None)
@@ -311,7 +322,9 @@ def _layer_cache(cfg: ModelConfig, batch: int, max_len: int, i: int, dtype):
     if cfg.use_mla:
         return mla_mod.init_mla_cache(cfg, batch, max_len, dtype)
     window_cache = bool(cfg.sliding_window) and not cfg.is_global_layer(i)
-    return attn.init_kv_cache(cfg, batch, max_len, window_cache=window_cache, dtype=dtype)
+    return attn.init_kv_cache(
+        cfg, batch, max_len, window_cache=window_cache, dtype=dtype
+    )
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
@@ -329,7 +342,9 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
             [
                 _stack(
                     [
-                        _layer_cache(cfg, batch, max_len, g * plan["group_len"] + i, dtype)
+                        _layer_cache(
+                            cfg, batch, max_len, g * plan["group_len"] + i, dtype
+                        )
                         for i in range(plan["group_len"])
                     ]
                 )

@@ -103,7 +103,11 @@ def _route(params, xg, cfg: ModelConfig):
     # no (G,S,E) one-hot; f is an indicator (no grad path, as standard).
     me = probs.mean(axis=(0, 1))                                 # (E,)
     ce = jnp.bincount(idx_k[..., 0].reshape(-1), length=e) / float(g * gs)
-    aux = cfg.router_aux_coef * e * jnp.sum(me * jax.lax.stop_gradient(ce.astype(jnp.float32)))
+    aux = (
+        cfg.router_aux_coef
+        * e
+        * jnp.sum(me * jax.lax.stop_gradient(ce.astype(jnp.float32)))
+    )
     return gate_k, idx_k, aux
 
 

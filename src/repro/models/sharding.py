@@ -196,7 +196,12 @@ def cache_specs(cache_shape: Any, cfg: ModelConfig, mesh) -> Any:
         elif name in ("c_kv", "k_pe"):   # (.., B, S, R/pe) — MLA latent
             base = ["__batch__", TP if leaf.shape[-2] % tp_size == 0 else None, None]
         elif name == "ssm":              # (.., B, H, P, N)
-            base = ["__batch__", TP if leaf.shape[-3] % tp_size == 0 else None, None, None]
+            base = [
+                "__batch__",
+                TP if leaf.shape[-3] % tp_size == 0 else None,
+                None,
+                None,
+            ]
         elif name == "conv":             # (.., B, W-1, C)
             base = ["__batch__", None, TP if leaf.shape[-1] % tp_size == 0 else None]
         elif name in ("self_k", "self_v", "mem_k", "mem_v"):  # (L,B,S,H,hd)

@@ -40,8 +40,12 @@ def mamba_init(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
     cdim = _conv_dim(cfg)
     ks = jax.random.split(key, 5)
     return {
-        "w_in": dense_init(ks[0], (d, 2 * di + 2 * cfg.ssm_groups * cfg.ssm_state + h), dtype=dtype),
-        "conv_w": dense_init(ks[1], (cfg.ssm_conv_width, cdim), fan_in=cfg.ssm_conv_width, dtype=dtype),
+        "w_in": dense_init(
+            ks[0], (d, 2 * di + 2 * cfg.ssm_groups * cfg.ssm_state + h), dtype=dtype
+        ),
+        "conv_w": dense_init(
+            ks[1], (cfg.ssm_conv_width, cdim), fan_in=cfg.ssm_conv_width, dtype=dtype
+        ),
         "conv_b": jnp.zeros((cdim,), dtype),
         "a_log": jnp.zeros((h,), jnp.float32),          # A = -exp(a_log) = -1
         "dt_bias": jnp.full((h,), -2.0, jnp.float32),   # softplus(-2) ~ 0.12

@@ -3,6 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.optim.compression import GradCompressor
@@ -34,6 +35,7 @@ def test_error_feedback_accumulates_to_zero_bias():
     )
 
 
+@pytest.mark.slow
 @settings(max_examples=10, deadline=None)
 @given(seed=st.integers(0, 2**31 - 1))
 def test_sgd_with_compression_converges(seed):

@@ -1,6 +1,7 @@
 """Point-in-time retrieval (paper §4.4): leakage freedom as a property."""
 
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.assets import Entity, Feature, FeatureSetSpec
@@ -46,6 +47,7 @@ queries = st.lists(
 )
 
 
+@pytest.mark.slow
 @settings(max_examples=60, deadline=None)
 @given(records, queries, st.sampled_from([0, 7, 50]), st.booleans())
 def test_property_no_leakage_and_nearest_past(recs, qs, delay, use_kernel):

@@ -1,0 +1,219 @@
+"""Stream-framing properties for the socket carrier (ISSUE 8 satellite).
+
+The wire v2 frame is NOT self-delimiting on a byte stream (its header
+carries the raw length, not the compressed length), so ``core/daemon.py``
+wraps every message in ``wire.frame_message``'s u32 length-prefix envelope
+and reassembles with ``wire.StreamDecoder``.  The contracts under test:
+
+  * REASSEMBLY — any partition of the byte stream into recv-sized chunks
+    (byte-at-a-time through whole-stream) yields the identical event
+    sequence, with every ``encode_run`` payload decoding back to the same
+    batches the in-process path would have produced;
+  * CONCATENATION — back-to-back messages of mixed kinds (frames, acks,
+    controls) come out one event each, in order;
+  * TRUNCATION — an incomplete tail yields nothing (no partial events,
+    no exception) until the missing bytes arrive;
+  * CORRUPTION — a payload flip inside an intact envelope produces one
+    "corrupt" event and the stream stays aligned (every later message
+    still decodes); a torn envelope triggers a resync scan that finds the
+    next real message boundary and counts the bytes skipped.
+"""
+
+import struct
+import zlib
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import wire
+from tests.core.test_wire import (
+    assert_batches_equal,
+    random_offline_batch,
+    random_online_batch,
+)
+
+
+def _run_payload(rng, seq0=0, n=3, plane="online"):
+    mk = random_online_batch if plane == "online" else random_offline_batch
+    batches = [mk(rng, seq=seq0 + i) for i in range(n)]
+    return batches, wire.encode_run(batches).data
+
+
+def _feed_chunked(dec, stream, chunk):
+    events = []
+    for i in range(0, len(stream), chunk):
+        events.extend(dec.feed(stream[i : i + chunk]))
+    return events
+
+
+# -- reassembly ---------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    chunk=st.integers(min_value=1, max_value=257),
+    n_msgs=st.integers(min_value=1, max_value=5),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_any_chunking_reassembles_identically(chunk, n_msgs, seed):
+    """Property: recv boundaries are invisible.  The same byte stream cut
+    at EVERY chunk size yields the same events, and each frame's batches
+    round-trip bit-exact against the ``encode_run`` input."""
+    rng = np.random.default_rng(seed)
+    all_batches, stream = [], b""
+    for m in range(n_msgs):
+        plane = "online" if (seed + m) % 2 else "offline"
+        batches, payload = _run_payload(rng, seq0=10 * m, n=2, plane=plane)
+        all_batches.append(batches)
+        stream += wire.frame_message(payload)
+
+    events = _feed_chunked(wire.StreamDecoder(), stream, chunk)
+    assert [e.kind for e in events] == ["frame"] * n_msgs
+    for want, ev in zip(all_batches, events):
+        assert len(ev.batches) == len(want)
+        for a, b in zip(want, ev.batches):
+            assert_batches_equal(a, b)
+
+
+def test_single_message_split_across_every_boundary():
+    """Exhaustive split of one envelope at every byte offset — including
+    splits inside the length prefix and inside the magic."""
+    rng = np.random.default_rng(3)
+    batches, payload = _run_payload(rng, n=1)
+    stream = wire.frame_message(payload)
+    for cut in range(1, len(stream)):
+        dec = wire.StreamDecoder()
+        assert dec.feed(stream[:cut]) == []  # nothing premature
+        (ev,) = dec.feed(stream[cut:])
+        assert ev.kind == "frame"
+        assert_batches_equal(batches[0], ev.batches[0])
+        assert dec.buffered_bytes == 0
+
+
+def test_concatenated_mixed_kinds_fed_whole():
+    """Frames, control messages, and acks glued end to end decode in
+    order, one event each, regardless of kind interleaving."""
+    rng = np.random.default_rng(11)
+    _, frame_payload = _run_payload(rng, n=2)
+    ctrl = wire.encode_control({"cmd": "ledger", "token": 7})
+    ack = wire.encode_ack(wire.ACK_OK, 0xDEAD, 42, [5, 6, 7])
+    stream = b"".join(
+        wire.frame_message(p) for p in (ctrl, frame_payload, ack, frame_payload)
+    )
+    dec = wire.StreamDecoder()
+    events = dec.feed(stream)
+    assert [e.kind for e in events] == ["control", "frame", "ack", "frame"]
+    assert events[0].control == {"cmd": "ledger", "token": 7}
+    assert events[2].ack.seqs == (5, 6, 7)
+    assert events[2].ack.rows == 42
+    assert dec.messages == 4 and dec.corrupt_messages == 0 and dec.resyncs == 0
+
+
+# -- truncation ---------------------------------------------------------------
+
+
+def test_truncated_tail_yields_nothing_until_completed():
+    """A message cut short emits no event and no error; delivering the
+    missing suffix later completes it."""
+    rng = np.random.default_rng(5)
+    batches, payload = _run_payload(rng, n=1)
+    stream = wire.frame_message(payload)
+    dec = wire.StreamDecoder()
+    assert dec.feed(stream[:-9]) == []
+    assert dec.buffered_bytes == len(stream) - 9
+    (ev,) = dec.feed(stream[-9:])
+    assert ev.kind == "frame"
+    assert_batches_equal(batches[0], ev.batches[0])
+
+
+# -- corruption ---------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31),
+    chunk=st.integers(min_value=1, max_value=97),
+)
+def test_payload_corruption_keeps_stream_aligned(seed, chunk):
+    """Property: flip one byte INSIDE a message payload (envelope intact).
+    The damaged message surfaces as a single "corrupt" event carrying the
+    as-received crc (the NACK token) and every later message still
+    decodes — corruption never desynchronizes the stream."""
+    rng = np.random.default_rng(seed)
+    _, p1 = _run_payload(rng, seq0=0)
+    batches2, p2 = _run_payload(rng, seq0=10)
+    # flip a byte past the magic so the envelope still looks like a frame
+    pos = 2 + int(rng.integers(0, len(p1) - 2))
+    bad = p1[:pos] + bytes([p1[pos] ^ 0xA5]) + p1[pos + 1 :]
+    stream = wire.frame_message(bad) + wire.frame_message(p2)
+
+    dec = wire.StreamDecoder()
+    events = _feed_chunked(dec, stream, chunk)
+    assert [e.kind for e in events] == ["corrupt", "frame"]
+    assert events[0].msg_crc == zlib.crc32(bad)
+    for a, b in zip(batches2, events[1].batches):
+        assert_batches_equal(a, b)
+    assert dec.corrupt_messages == 1 and dec.resyncs == 0
+
+
+def test_torn_envelope_resyncs_to_next_boundary():
+    """Garbage between two messages (a torn length prefix) triggers the
+    resync scan: the decoder skips to the next plausible boundary and the
+    following message decodes normally."""
+    rng = np.random.default_rng(9)
+    batches1, p1 = _run_payload(rng, seq0=0, n=1)
+    batches2, p2 = _run_payload(rng, seq0=5, n=1)
+    garbage = b"\xff" * 4 + b"ZZ" + b"\x00" * 14  # implausible len + bad magic
+    stream = wire.frame_message(p1) + garbage + wire.frame_message(p2)
+
+    dec = wire.StreamDecoder()
+    events = dec.feed(stream)
+    assert [e.kind for e in events] == ["frame", "frame"]
+    assert_batches_equal(batches1[0], events[0].batches[0])
+    assert_batches_equal(batches2[0], events[1].batches[0])
+    assert dec.resyncs >= 1
+    assert dec.skipped_bytes == len(garbage)
+
+
+def test_resync_under_tiny_chunks_terminates():
+    """Pathological case: pure garbage fed a byte at a time must neither
+    loop forever nor blow the buffer — the decoder keeps only a 5-byte
+    tail while scanning."""
+    dec = wire.StreamDecoder()
+    for b in bytes(range(256)) * 4:
+        dec.feed(bytes([b]))
+    assert dec.buffered_bytes <= 16
+    # and a real message after the noise still gets through
+    rng = np.random.default_rng(2)
+    batches, payload = _run_payload(rng, n=1)
+    events = _feed_chunked(dec, wire.frame_message(payload), 7)
+    assert [e.kind for e in events][-1] == "frame"
+    assert_batches_equal(batches[0], events[-1].batches[0])
+
+
+def test_ack_and_control_crc_reject():
+    """Damaged ack/control payloads inside intact envelopes surface as
+    corrupt events, not exceptions, and do not derail later traffic."""
+    ack = bytearray(wire.encode_ack(wire.ACK_OK, 1, 2, [3]))
+    ack[-1] ^= 0x40
+    ctrl = bytearray(wire.encode_control({"cmd": "hello"}))
+    ctrl[-2] ^= 0x01
+    good = wire.encode_control({"cmd": "hello"})
+    stream = b"".join(
+        wire.frame_message(bytes(p)) for p in (ack, ctrl, good)
+    )
+    dec = wire.StreamDecoder()
+    events = dec.feed(stream)
+    assert [e.kind for e in events] == ["corrupt", "corrupt", "control"]
+    assert dec.corrupt_messages == 2
+
+
+def test_frame_message_bounds():
+    """The envelope refuses payloads it could never reassemble."""
+    with pytest.raises(wire.WireFormatError):
+        wire.frame_message(b"x")  # below the 2-byte magic minimum
+    wrapped = wire.frame_message(b"FWok")
+    (n,) = struct.unpack_from("<I", wrapped, 0)
+    assert n == 4 and wrapped[4:] == b"FWok"

@@ -175,6 +175,7 @@ _ELASTIC_SCRIPT = textwrap.dedent(
 )
 
 
+@pytest.mark.proc
 def test_elastic_reshard_subprocess():
     """Checkpoint saved from a (4,2) mesh restores onto a (2,4) mesh and the
     next step's loss matches the non-resharded continuation."""

@@ -16,6 +16,7 @@ ARGS = ["--arch", "gemma-2b", "--steps", "12", "--batch", "2", "--seq", "32",
         "--ckpt-every", "4", "--log-every", "100"]
 
 
+@pytest.mark.proc
 def test_kill_restart_bit_identical(tmp_path):
     d1 = str(tmp_path / "uninterrupted")
     ref = train.main(ARGS + ["--ckpt-dir", d1])

@@ -69,6 +69,7 @@ def test_flash_causality():
     assert not np.allclose(out1[:, 41:], out2[:, 41:])
 
 
+@pytest.mark.slow
 @settings(max_examples=10, deadline=None)
 @given(
     seed=st.integers(0, 2**31 - 1),

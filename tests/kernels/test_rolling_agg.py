@@ -120,6 +120,7 @@ def test_rolling_agg_deep_span_falls_back():
 # ---------------------------------------------------------------------------
 # properties
 # ---------------------------------------------------------------------------
+@pytest.mark.slow
 @settings(max_examples=25, deadline=None)
 @given(
     n=st.integers(1, 300),

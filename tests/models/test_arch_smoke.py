@@ -22,6 +22,10 @@ from repro.launch.steps import TrainState, make_serve_step, make_train_step
 from repro.models import api
 from repro.optim.adamw import adamw
 
+# compile-heavy across every assigned arch — the whole module rides the
+# parallel slow lane in CI (scripts/tier1.sh runs it locally as always)
+pytestmark = pytest.mark.slow
+
 BATCH, SEQ = 2, 32
 _CACHE: dict = {}
 

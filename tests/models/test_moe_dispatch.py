@@ -41,6 +41,7 @@ def test_sort_matches_einsum_no_drop(e, k):
     np.testing.assert_allclose(a1, a2, rtol=1e-6)
 
 
+@pytest.mark.slow
 @settings(max_examples=10, deadline=None)
 @given(seed=st.integers(0, 1000), cf=st.floats(1.0, 2.0))
 def test_sort_matches_einsum_drop_policy(seed, cf):
@@ -54,6 +55,7 @@ def test_sort_matches_einsum_drop_policy(seed, cf):
     np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.slow
 def test_gradients_match_oracle():
     cfg = _cfg()
     p = _params(cfg)
@@ -129,6 +131,7 @@ _EP_SCRIPT = textwrap.dedent(
 )
 
 
+@pytest.mark.proc
 def test_ep_shard_map_matches_oracle_subprocess():
     proc = subprocess.run(
         [sys.executable, "-c", _EP_SCRIPT],
