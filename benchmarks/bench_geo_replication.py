@@ -174,34 +174,34 @@ def bench_replication_throughput(
     _assert_offline_identical(home_off, replica_off, spec)
 
     ship = repl.shipped["eastus"]
-    by_plane = ship["by_plane"]
+    by_plane = ship.by_plane
     return {
         "window_rows": window_rows,
         "batches": batches,
         "home_merge_rows_per_s": int(window_rows / home_wall),
-        "shipped_rows": pending["rows"],
-        "reduction_x": round(window_rows / max(pending["rows"], 1), 2),
-        "replica_apply_rows_per_s": int(pending["rows"] / apply_wall),
+        "shipped_rows": pending.rows,
+        "reduction_x": round(window_rows / max(pending.rows, 1), 2),
+        "replica_apply_rows_per_s": int(pending.rows / apply_wall),
         "window_rows_per_s_through_replication": int(window_rows / apply_wall),
         # measured wire traffic, per plane: raw = serialized payload bytes,
         # (plain) bytes = post-zlib frame bytes actually priced by the WAN
-        "shipped_bytes": by_plane["online"]["bytes"],
-        "shipped_raw_bytes": by_plane["online"]["raw_bytes"],
+        "shipped_bytes": by_plane["online"].bytes,
+        "shipped_raw_bytes": by_plane["online"].raw_bytes,
         "home_offline_merge_rows_per_s": int(window_rows / off_home_wall),
-        "offline_shipped_rows": off_pending["rows"],
-        "offline_apply_rows_per_s": int(off_pending["rows"] / off_apply_wall),
-        "offline_shipped_bytes": by_plane["offline"]["bytes"],
-        "offline_shipped_raw_bytes": by_plane["offline"]["raw_bytes"],
-        "wire_frames": ship["frames"],
+        "offline_shipped_rows": off_pending.rows,
+        "offline_apply_rows_per_s": int(off_pending.rows / off_apply_wall),
+        "offline_shipped_bytes": by_plane["offline"].bytes,
+        "offline_shipped_raw_bytes": by_plane["offline"].raw_bytes,
+        "wire_frames": ship.frames,
         # header-aware, matching WireFrame.compression_ratio: exactly 1.0 at
         # break-even raw shipping, so the CI gate's >= 1.0 floor is sound
         # even for an uncompressed (compress_level=0) re-baseline
         "compression_ratio": round(
-            (ship["raw_bytes"] + wire.HEADER_SIZE * ship["frames"])
-            / max(ship["bytes"], 1),
+            (ship.raw_bytes + wire.HEADER_SIZE * ship.frames)
+            / max(ship.bytes, 1),
             3,
         ),
-        "modeled_wan_ship_ms": round(ship["ms"], 2),
+        "modeled_wan_ship_ms": round(ship.ms, 2),
         "replica_state_identical": True,
         "offline_state_identical": True,
     }
@@ -292,9 +292,9 @@ def bench_failover_replay(
         np.testing.assert_array_equal(post[name], pre_failure[name], err_msg=name)
     assert east_off.num_rows("geo", 1) == pre_failure_off_rows
     return {
-        "unacked_batches": lag["batches"],
-        "unacked_rows": lag["rows"],
-        "unacked_offline_rows": lag["planes"]["offline"]["rows"],
+        "unacked_batches": lag.batches,
+        "unacked_rows": lag.rows,
+        "unacked_offline_rows": lag.offline.rows,
         "replay_ms": round(wall * 1e3, 2),
         "replay_rows_per_s": int(promoted["replayed_rows"] / max(wall, 1e-9)),
         "promoted_state_identical": True,
@@ -425,12 +425,12 @@ def bench_chaos_convergence(
 
     st = repl.delivery["eastus"]
     ship = repl.shipped["eastus"]
-    unique_batches = pending["batches"]
+    unique_batches = pending.batches
     return {
         "seed": plan.seed,
         "fault_rates": dict(CHAOS_RATES),
         "window_rows": window_rows,
-        "unique_rows": pending["rows"],
+        "unique_rows": pending.rows,
         "unique_batches": unique_batches,
         "drain_rounds": rounds,
         "retried_batches": st.retries,
@@ -438,14 +438,14 @@ def bench_chaos_convergence(
         "corrupt_frames": st.corrupt_frames,
         "redelivered_batches": st.redelivered_batches,
         "channel_counts": dict(channel.counts),
-        "applied_batches": ship["batches"],
+        "applied_batches": ship.batches,
         # at-least-once redundancy cost: batches applied (incl. redeliveries)
         # per unique logged batch, and wire bytes per unique payload byte
         "retry_amplification_x": round(
-            ship["batches"] / max(unique_batches, 1), 3
+            ship.batches / max(unique_batches, 1), 3
         ),
-        "shipped_bytes": ship["bytes"],
-        "goodput_rows_per_s": int(pending["rows"] / max(wall, 1e-9)),
+        "shipped_bytes": ship.bytes,
+        "goodput_rows_per_s": int(pending.rows / max(wall, 1e-9)),
         "converged_identical": True,
         "partition": _chaos_partition(),
     }
@@ -515,8 +515,8 @@ def _ship_over_socket(
             "rows_applied": ledger["rows_applied"],
             "nacks": ledger["nacks"],
             "timeouts": st.timeouts,
-            "shipped_bytes": ship["bytes"],
-            "shipped_raw_bytes": ship["raw_bytes"],
+            "shipped_bytes": ship.bytes,
+            "shipped_raw_bytes": ship.raw_bytes,
             "measured_rtt_ms": round(
                 topo.measured_latency("westus2", "eastus") or 0.0, 2
             ),
@@ -571,6 +571,144 @@ def bench_socket_transport(
     }
 
 
+def bench_multi_home(batches: int = 8, rows: int = 2_000) -> dict:
+    """Active-active multi-home mesh (core/multihome.py): every region is a
+    write home for its hash range of the keyspace.  The workload is fully
+    deterministic (seeded rng, fixed ShardMap, idempotent merges), so the
+    per-shard shipped bytes and the convergence booleans gate EXACTLY
+    against the committed artifact; the forwarded-write fraction is a pure
+    function of the key hash and gates within the calibrated tolerance.
+
+    Three sub-drills ride the same store: (1) concurrent writes entering
+    at all three regions, drained to convergence; (2) per-shard failover —
+    one region dies with un-drained batches, ONLY its range promotes; (3)
+    the dead region rejoins (per-home owned-range delta bootstrap) and a
+    rebalance hands it a range back, after which writes entering at the
+    rejoined region converge again."""
+    from repro.core.multihome import MultiHomeGeoStore
+
+    rng = np.random.default_rng(17)
+    topo = _topo()
+    spec = _spec()
+    mh = MultiHomeGeoStore(
+        "bench-mh", topology=topo, regions=list(REGIONS), online_partitions=8
+    )
+    mh.create_feature_set(spec)
+    mh.advance_clock(3 * 10**8)
+
+    # -- concurrent writes at every region -------------------------------
+    t0 = time.perf_counter()
+    for i in range(batches):
+        for region in REGIONS:
+            mh.write_batch(
+                "geo",
+                1,
+                _frame(rng, rows, 5_000, 10**6 * i),
+                creation_ts=2 * 10**8 + i,
+                region=region,
+            )
+    write_wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    converge_rounds = mh.converge()
+    drain_wall = time.perf_counter() - t0
+
+    def _mesh_identical() -> tuple[bool, bool]:
+        regions = list(mh.replicators)
+        ref_on = mh.online[regions[0]].dump_all("geo", 1)
+        online_ok = True
+        for r in regions[1:]:
+            d = mh.online[r].dump_all("geo", 1)
+            online_ok &= set(d.names) == set(ref_on.names) and all(
+                np.array_equal(ref_on[n], d[n]) for n in ref_on.names
+            )
+        ref_off = mh.offline[regions[0]].canonical_history("geo", 1)
+        offline_ok = True
+        for r in regions[1:]:
+            h = mh.offline[r].canonical_history("geo", 1)
+            offline_ok &= set(h.names) == set(ref_off.names) and all(
+                np.array_equal(ref_off[n], h[n]) for n in ref_off.names
+            )
+        return online_ok, offline_ok
+
+    online_ok, offline_ok = _mesh_identical()
+    # one home = one shard here, so per-home-log ledgers ARE per-shard
+    # shipped bytes: sum each home's wire bytes over its replica links
+    per_shard_bytes = {
+        str(sid): sum(
+            ledger.bytes
+            for ledger in mh.replicators[
+                mh.shard_map.owner_of(sid)
+            ].shipped.values()
+        )
+        for sid in range(mh.shard_map.num_shards)
+    }
+    total_rows = mh.write_log["rows"]
+    forwarded = mh.write_log["forwarded_rows"]
+
+    # -- per-shard failover: one region dies with un-drained batches -----
+    victim = REGIONS[2]
+    for region in REGIONS:
+        mh.write_batch(
+            "geo",
+            1,
+            _frame(rng, rows, 5_000, 10**6 * batches),
+            creation_ts=2 * 10**8 + batches,
+            region=region,
+        )
+    lost_shards = list(mh.shard_map.owned_shards(victim))
+    mh.mark_down(victim)
+    t0 = time.perf_counter()
+    fo = mh.failover(victim)
+    failover_wall = time.perf_counter() - t0
+    mh.converge()
+    fo_online_ok, fo_offline_ok = _mesh_identical()
+
+    # -- rejoin + rebalance: the range moves back to the recovered region -
+    mh.mark_up(victim)
+    rj = mh.rejoin(victim)
+    moved = mh.rebalance(lost_shards[0], victim)
+    for region in (victim, REGIONS[0]):
+        mh.write_batch(
+            "geo",
+            1,
+            _frame(rng, rows, 5_000, 10**6 * (batches + 1)),
+            creation_ts=2 * 10**8 + batches + 1,
+            region=region,
+        )
+    mh.converge()
+    rb_online_ok, rb_offline_ok = _mesh_identical()
+
+    return {
+        "regions": len(REGIONS),
+        "num_shards": mh.shard_map.num_shards,
+        "write_rows": total_rows,
+        "forwarded_rows": forwarded,
+        "forwarded_fraction": round(forwarded / max(total_rows, 1), 4),
+        "multi_home_write_rows_per_s": int(batches * rows * len(REGIONS) / write_wall),
+        "converge_rounds": converge_rounds,
+        "drain_rows_per_s": int(total_rows / max(drain_wall, 1e-9)),
+        "per_shard_shipped_bytes": per_shard_bytes,
+        "online_identical": online_ok,
+        "offline_identical": offline_ok,
+        "failover": {
+            "victim": victim,
+            "promoted": fo["promoted"],
+            "shards_moved": fo["shards"],
+            "replayed_rows": fo["replayed_rows"],
+            "failover_ms": round(failover_wall * 1e3, 2),
+            "online_identical": fo_online_ok,
+            "offline_identical": fo_offline_ok,
+        },
+        "rejoin_rebalance": {
+            "bootstrap_online_rows": rj["online_rows"],
+            "bootstrap_offline_rows": rj["offline_rows"],
+            "moved_shard": moved["shard"],
+            "online_identical": rb_online_ok,
+            "offline_identical": rb_offline_ok,
+        },
+    }
+
+
 def run(fast: bool = False) -> dict:
     # throughput and chaos keep their full deterministic workloads even in
     # --fast (both are sub-second): check_regression.py gates their
@@ -584,6 +722,9 @@ def run(fast: bool = False) -> dict:
         # the socket phase keeps its full workload in --fast too: its byte
         # counts and convergence booleans are gated like the rest
         "socket": bench_socket_transport(),
+        # multi-home keeps its full deterministic workload as well: per-
+        # shard shipped bytes and convergence booleans gate exactly
+        "multi_home": bench_multi_home(),
     }
 
 

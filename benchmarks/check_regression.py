@@ -217,6 +217,62 @@ def check_chaos(
         print(f"  ok: chaos goodput {got} rows/s (calibrated floor {floor})")
 
 
+def check_multi_home(
+    cur: dict, base: dict, tolerance: float, failures: list[str]
+) -> None:
+    """Active-active multi-home gates (ISSUE 9).  EXACT: per-shard shipped
+    wire bytes — each home's log carries only its owned range's slices
+    (the echo-breaking publish filter), and the workload is seeded +
+    fixed-shape, so any drift means the shard filter, the key hash, or
+    the wire format changed and the artifact must be re-committed
+    deliberately.  ABSOLUTE: every convergence boolean (steady-state,
+    post-per-shard-failover, post-rejoin-rebalance) is re-asserted fresh.
+    CALIBRATED: the forwarded-write fraction is a pure function of the
+    shard coordinate hash (~(R-1)/R for R uniform ranges), gated within
+    the same tolerance as the wall-clock numbers so a routing bug that
+    stops (or starts over-) forwarding fails the gate without pinning the
+    hash itself."""
+    c, b = cur["multi_home"], base["multi_home"]
+    got_bytes, want_bytes = c["per_shard_shipped_bytes"], b["per_shard_shipped_bytes"]
+    if got_bytes != want_bytes:
+        failures.append(
+            f"multi-home per-shard shipped bytes drifted: {got_bytes} vs "
+            f"committed {want_bytes} (re-commit BENCH_geo_replication.json "
+            f"if intentional)"
+        )
+    else:
+        print(
+            f"  ok: multi-home per-shard shipped bytes exact "
+            f"({sum(got_bytes.values())} B over {len(got_bytes)} shards)"
+        )
+    for field, sub in (
+        ("online_identical", None),
+        ("offline_identical", None),
+        ("online_identical", "failover"),
+        ("offline_identical", "failover"),
+        ("online_identical", "rejoin_rebalance"),
+        ("offline_identical", "rejoin_rebalance"),
+    ):
+        scope = c if sub is None else c.get(sub, {})
+        if not scope.get(field):
+            where = f"{sub}." if sub else ""
+            failures.append(
+                f"multi-home {where}{field} is no longer asserted true"
+            )
+    got_f, want_f = c["forwarded_fraction"], b["forwarded_fraction"]
+    if abs(got_f - want_f) > tolerance * want_f:
+        failures.append(
+            f"multi-home forwarded-write fraction drifted >{tolerance:.0%}: "
+            f"{got_f} vs committed {want_f}"
+        )
+    else:
+        print(
+            f"  ok: multi-home forwarded fraction {got_f} "
+            f"(committed {want_f}, converged in {c['converge_rounds']} "
+            f"round(s), failover moved shards {c['failover']['shards_moved']})"
+        )
+
+
 def check_socket(cur: dict, base: dict, failures: list[str]) -> None:
     """Real-socket transport gates (ISSUE 8).  EXACT: the socket phase
     ships the same seeded 100k-row window as the throughput bench, so its
@@ -375,6 +431,7 @@ def main() -> None:
         check_geo_replication(geo_cur, geo_base, args.tolerance, scale, failures)
         check_chaos(geo_cur, geo_base, args.tolerance, scale, failures)
         check_socket(geo_cur, geo_base, failures)
+        check_multi_home(geo_cur, geo_base, args.tolerance, failures)
     if args.serving_baseline:
         srv_cur = load_suite_result(Path(args.current), "serving")
         srv_base = load_suite_result(Path(args.serving_baseline), "serving")

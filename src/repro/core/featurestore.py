@@ -168,6 +168,54 @@ class FeatureStore:
         self._refresh_staleness()
         return {k: stats[k] + stats2[k] for k in stats}
 
+    def write_batch(
+        self,
+        name: str,
+        version: int,
+        frame: Table,
+        *,
+        creation_ts: Optional[int] = None,
+        region: Optional[str] = None,
+    ) -> dict:
+        """Direct ingest of one frame outside the scheduler — the
+        ``StoreFacade`` write surface.  Merges into every enabled plane
+        with one shared creation_ts (offline first, like a materialization
+        job).  ``region`` is accepted for facade parity and ignored: a
+        single-region store has exactly one place the write can land."""
+        spec = self.registry.get_feature_set(name, version)
+        creation = int(self.clock()) if creation_ts is None else int(creation_ts)
+        out: dict = {"rows": len(frame), "creation_ts": creation}
+        if spec.materialization.offline_enabled:
+            out["offline"] = self.offline.merge_with_stats(spec, frame, creation)
+        if spec.materialization.online_enabled:
+            out["online"] = self.online.merge(spec, frame, creation)
+        return out
+
+    # -- facade degenerates (StoreFacade surface on a single-region store) ------
+    def lag(self, region: str):
+        """Replication lag toward ``region`` — all-zeros ``LagStats``
+        unless a GeoReplicator is attached."""
+        if self.replicator is not None:
+            return self.replicator.lag(region)
+        from repro.core.replication import LagStats  # import cycle: late
+
+        return LagStats()
+
+    def drain(self, region: Optional[str] = None) -> dict:
+        if self.replicator is not None:
+            return self.replicator.drain(region)
+        return {}
+
+    def failover(self, region: Optional[str] = None):
+        """A single-region store has nothing to promote — always None."""
+        return None
+
+    def rejoin(self, region: str, **kwargs) -> dict:
+        raise ValueError(
+            "single-region FeatureStore has no replica set to rejoin; "
+            "use GeoFeatureStore/MultiHomeGeoStore"
+        )
+
     def get_offline_features(
         self,
         spine: Table,
@@ -262,7 +310,7 @@ class FeatureStore:
         if self.replicator is not None:
             for region in self.replicator.replica_regions():
                 self.monitor.record_replication_lag(
-                    region, **self.replicator.lag(region)
+                    region, self.replicator.lag(region)
                 )
 
     # -- state checkpoint (resume without data loss) ----------------------------------

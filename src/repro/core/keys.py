@@ -6,13 +6,32 @@ identically (so tests/debugging stay transparent); composite keys are mixed
 into 64 bits (splitmix64) — a documented collision assumption at ~2^-64 per
 pair, the standard trade for fixed-width device-side key tables.
 Live keys are forced non-negative so the online store's -1 sentinel is safe.
+
+Multi-home sharding (``regions.ShardMap``) needs a UNIFORM coordinate over
+``[0, 2**KEY_SPACE_BITS)`` so contiguous hash ranges split load evenly with
+no per-key placement table.  Encoded keys are NOT that coordinate: the
+single-integer transparency path above passes raw ids through unmixed, so
+small id universes would all land in the first range.  ``shard_coordinate``
+is: one more splitmix64 round over the encoded key, sign bit cleared —
+uniform regardless of which encode path produced the key, and the SAME
+mapping on every writer, so routing and the rebalance range filter agree.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["encode_keys", "encode_full_keys"]
+__all__ = [
+    "KEY_SPACE_BITS",
+    "encode_keys",
+    "encode_full_keys",
+    "shard_coordinate",
+]
+
+#: Width of the shard-placement keyspace: ``shard_coordinate`` maps every
+#: encoded key uniformly into [0, 2**63).  ShardMap range bounds live in
+#: the same interval.
+KEY_SPACE_BITS = 63
 
 _C1 = np.uint64(0xBF58476D1CE4E5B9)
 _C2 = np.uint64(0x94D049BB133111EB)
@@ -41,6 +60,23 @@ def encode_keys(columns: list[np.ndarray]) -> np.ndarray:
                 h = _hash_object_column(col)
             acc = _splitmix64(acc ^ h)
     return (acc >> np.uint64(1)).view(np.int64)  # clear sign bit
+
+
+def shard_coordinate(keys: np.ndarray) -> np.ndarray:
+    """Uniform placement coordinate of ALREADY-ENCODED entity keys:
+    uint64 in ``[0, 2**KEY_SPACE_BITS)``.
+
+    One splitmix64 round over the encoded key, sign bit cleared.  This —
+    not the raw encoded key — is what ``regions.ShardMap`` range-partitions
+    and what the delta-bootstrap ``key_range`` filter masks on: the
+    single-integer encode path is an identity mapping (transparency for
+    tests/debugging), so raw keys cluster at the bottom of the keyspace
+    whenever ids are small, while this coordinate is uniform for every
+    encode path.  Pure per-key function, so every region computes the same
+    routing with no coordination."""
+    with np.errstate(over="ignore"):
+        h = _splitmix64(np.asarray(keys, np.int64).view(np.uint64))
+    return h >> np.uint64(1)
 
 
 def encode_full_keys(ids: np.ndarray, event_ts: np.ndarray, creation_ts) -> np.ndarray:

@@ -175,32 +175,62 @@ class HealthMonitor:
         histogram's max."""
         self.system.observe("serving/stale_age_ms", ms)
 
-    def record_replication_lag(
-        self,
-        replica: str,
-        *,
-        batches: int,
-        rows: int,
-        staleness_ms: int,
-        planes: Optional[dict] = None,
-    ) -> None:
+    def record_replication_lag(self, replica: str, lag) -> None:
         """Per-replica geo-replication lag (§4.1.2 road-map mechanism): how
         many un-acked merge batches/rows the replica is behind, and how old
-        the oldest pending batch is in clock units.  ``planes`` optionally
-        breaks the counts down per store plane (online serving vs offline
-        history), so an offline-only backlog is visible on its own gauge."""
-        self.system.set_gauge(f"replication/lag_batches/{replica}", float(batches))
-        self.system.set_gauge(f"replication/lag_rows/{replica}", float(rows))
+        the oldest pending batch is in clock units.  ``lag`` is a
+        ``replication.LagStats`` (duck-typed here so monitoring stays
+        import-free of the data plane); the per-plane breakdown (online
+        serving vs offline history) gets its own gauges, so an offline-only
+        backlog is visible rather than averaged away."""
+        self.system.set_gauge(f"replication/lag_batches/{replica}", float(lag.batches))
+        self.system.set_gauge(f"replication/lag_rows/{replica}", float(lag.rows))
         self.system.set_gauge(
-            f"replication/staleness_ms/{replica}", float(staleness_ms)
+            f"replication/staleness_ms/{replica}", float(lag.staleness_ms)
         )
-        for plane, d in (planes or {}).items():
+        for plane, d in lag.planes.items():
             self.system.set_gauge(
-                f"replication/lag_batches/{plane}/{replica}", float(d["batches"])
+                f"replication/lag_batches/{plane}/{replica}", float(d.batches)
             )
             self.system.set_gauge(
-                f"replication/lag_rows/{plane}/{replica}", float(d["rows"])
+                f"replication/lag_rows/{plane}/{replica}", float(d.rows)
             )
+
+    def record_shard_lag(
+        self, replica: str, shard: int, *, batches: int, rows: int
+    ) -> None:
+        """Un-acked backlog of ONE shard-home's log toward one replica —
+        the multi-home breakdown of ``record_replication_lag``.  The
+        replica name sits MID-PATH (the shard id is the trailing segment),
+        which is exactly the shape the old suffix-only
+        ``clear_replica_gauges`` missed."""
+        self.system.set_gauge(
+            f"replication/shard_lag_batches/{replica}/{shard}", float(batches)
+        )
+        self.system.set_gauge(
+            f"replication/shard_lag_rows/{replica}/{shard}", float(rows)
+        )
+
+    def record_shard_ownership(self, owners) -> None:
+        """Current ShardMap assignment: per-shard owner index plus per-region
+        owned-range counts, refreshed wholesale after any cutover."""
+        regions = sorted(set(owners))
+        for sid, region in enumerate(owners):
+            self.system.set_gauge(
+                f"shards/owner_index/{sid}", float(regions.index(region))
+            )
+        for region in regions:
+            self.system.set_gauge(
+                f"shards/owned/{region}",
+                float(sum(1 for o in owners if o == region)),
+            )
+
+    def record_forwarded_write(self, src: str, dst: str, rows: int) -> None:
+        """Rows a multi-home write split out of ``src``'s batch and routed
+        to shard-home ``dst`` — the cross-region write-forwarding cost the
+        multi-home bench gates as a fraction of total written rows."""
+        self.system.inc("multihome/forwarded_rows", rows)
+        self.system.inc(f"multihome/forwarded_rows/{src}/{dst}", rows)
 
     def record_replication_ship(
         self,
@@ -257,13 +287,19 @@ class HealthMonitor:
         the serving set (drop, failover promotion, dead ex-home).  Gauges
         are last-value-wins: without this, a departed region keeps
         reporting its final lag/staleness forever, which reads as a live
-        replica that stopped draining."""
-        suffix = f"/{replica}"
+        replica that stopped draining.
+
+        The match is on the replica as a FULL path segment ANYWHERE in the
+        key, not just the suffix: per-shard gauges
+        (``replication/shard_lag_batches/{replica}/{shard}``) put the
+        replica mid-path, and the old suffix-only match left those behind —
+        a rejoined region resurrected its pre-eviction per-shard lag
+        readings."""
         gauges = self.system.gauges
         for key in [
             k
             for k in gauges
-            if k.startswith("replication/") and k.endswith(suffix)
+            if k.startswith("replication/") and replica in k.split("/")
         ]:
             del gauges[key]
 

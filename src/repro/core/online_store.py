@@ -89,7 +89,7 @@ from repro.core.table import Table
 from repro.kernels.online_lookup import ops as lookup_ops
 from repro.kernels.online_merge import ops as merge_ops
 
-__all__ = ["DeviceTableState", "OnlineStore", "o_batch_byte_budget"]
+__all__ = ["DeviceTableState", "MergeStats", "OnlineStore", "o_batch_byte_budget"]
 
 _I32_MAX = np.int32(np.iinfo(np.int32).max)
 
@@ -111,6 +111,61 @@ _bucket = lookup_ops.pow2_bucket
 
 def _nbytes(*arrays) -> int:
     return int(sum(a.size * a.dtype.itemsize for a in arrays))
+
+
+@dataclasses.dataclass(frozen=True)
+class MergeStats:
+    """Typed per-batch merge result: exact Algorithm-2 tallies plus the
+    reduced winning writes (``touched_*`` parallel arrays, sorted by
+    (part, slot)) — the complete reduced batch geo-replication ships.
+
+    Frozen: a merge's outcome is a fact, and several consumers (replication
+    listener, serving-cache invalidation, materializer outcome records) read
+    the SAME instance.  The one post-hoc annotation — the replication
+    listener stamping the log sequence it published under — goes through
+    ``annotate_replication_seq`` so the exception is explicit.  Supports
+    ``stats["key"]``/``.get`` so dict-era consumers and JSON paths keep
+    working, and ``as_dict()`` for bench artifacts."""
+
+    engine: str
+    inserts: int
+    overrides: int
+    noops: int
+    creation_ts: int
+    touched_parts: np.ndarray
+    touched_slots: np.ndarray
+    touched_keys: np.ndarray
+    touched_event_ts: np.ndarray
+    touched_values: np.ndarray
+    replication_seq: Optional[int] = None
+
+    def annotate_replication_seq(self, seq: Optional[int]) -> None:
+        object.__setattr__(self, "replication_seq", seq)
+
+    def __getitem__(self, key: str):
+        try:
+            return getattr(self, key)
+        except AttributeError:
+            raise KeyError(key) from None
+
+    def __contains__(self, key) -> bool:
+        # without this, `key in stats` falls back to iterating
+        # __getitem__(0), which getattr rejects
+        return isinstance(key, str) and hasattr(self, key)
+
+    def get(self, key: str, default=None):
+        return getattr(self, key, default)
+
+    def as_dict(self) -> dict:
+        return {
+            "engine": self.engine,
+            "inserts": self.inserts,
+            "overrides": self.overrides,
+            "noops": self.noops,
+            "creation_ts": self.creation_ts,
+            "touched_rows": int(len(self.touched_keys)),
+            "replication_seq": self.replication_seq,
+        }
 
 
 @dataclasses.dataclass
@@ -378,7 +433,7 @@ class OnlineStore:
         creation_ts: int,
         *,
         engine: Optional[str] = None,
-    ) -> dict:
+    ) -> MergeStats:
         """Merge one materialization frame.  Returns per-batch stats: exact
         Algorithm-2 tallies plus the touched-slot coordinates and the reduced
         winner rows that landed there (sorted by (part, slot)) — the reduced
@@ -413,7 +468,7 @@ class OnlineStore:
         creation_ts: int,
         *,
         engine: Optional[str] = None,
-    ) -> dict:
+    ) -> MergeStats:
         """Apply an already-reduced batch keyed by ENCODED int64 ids — the
         geo-replication apply path (and snapshot-bootstrap path) a replica
         store runs on a shipped ``ReplicatedBatch``.
@@ -454,16 +509,16 @@ class OnlineStore:
         return stats
 
     @staticmethod
-    def _empty_stats(engine: str, d: int, creation_ts: int) -> dict:
-        return {
-            "engine": engine, "inserts": 0, "overrides": 0, "noops": 0,
-            "creation_ts": int(creation_ts),
-            "touched_parts": np.empty(0, np.int64),
-            "touched_slots": np.empty(0, np.int64),
-            "touched_keys": np.empty(0, np.int64),
-            "touched_event_ts": np.empty(0, np.int64),
-            "touched_values": np.zeros((0, d), np.float32),
-        }
+    def _empty_stats(engine: str, d: int, creation_ts: int) -> MergeStats:
+        return MergeStats(
+            engine=engine, inserts=0, overrides=0, noops=0,
+            creation_ts=int(creation_ts),
+            touched_parts=np.empty(0, np.int64),
+            touched_slots=np.empty(0, np.int64),
+            touched_keys=np.empty(0, np.int64),
+            touched_event_ts=np.empty(0, np.int64),
+            touched_values=np.zeros((0, d), np.float32),
+        )
 
     def _merge_vector(
         self,
@@ -475,7 +530,7 @@ class OnlineStore:
         creation_ts: int,
         *,
         use_kernel: bool = False,
-    ) -> dict:
+    ) -> MergeStats:
         t = self._tables[key]
         t.slot_cache = None
         if use_kernel:
@@ -607,25 +662,22 @@ class OnlineStore:
     @staticmethod
     def _batch_stats(
         ins, ovr, nop, tparts, tslots, tkeys, tev, tvals, creation_ts, *, engine
-    ) -> dict:
-        """Per-batch stats: Algorithm-2 tallies + the reduced winning writes.
-        ``touched_*`` arrays are parallel, sorted by (part, slot) — coords,
-        encoded key, winning event_ts, and feature row of every slot this
-        batch actually (re)wrote; with the shared ``creation_ts`` they are
-        the complete reduced batch geo-replication ships."""
+    ) -> MergeStats:
+        """Per-batch stats: Algorithm-2 tallies + the reduced winning writes,
+        sorted by (part, slot) — see ``MergeStats``."""
         order = np.lexsort((tslots, tparts))
-        return {
-            "engine": engine,
-            "inserts": int(ins),
-            "overrides": int(ovr),
-            "noops": int(nop),
-            "creation_ts": int(creation_ts),
-            "touched_parts": np.asarray(tparts, np.int64)[order],
-            "touched_slots": np.asarray(tslots, np.int64)[order],
-            "touched_keys": np.asarray(tkeys, np.int64)[order],
-            "touched_event_ts": np.asarray(tev, np.int64)[order],
-            "touched_values": np.asarray(tvals, np.float32)[order],
-        }
+        return MergeStats(
+            engine=engine,
+            inserts=int(ins),
+            overrides=int(ovr),
+            noops=int(nop),
+            creation_ts=int(creation_ts),
+            touched_parts=np.asarray(tparts, np.int64)[order],
+            touched_slots=np.asarray(tslots, np.int64)[order],
+            touched_keys=np.asarray(tkeys, np.int64)[order],
+            touched_event_ts=np.asarray(tev, np.int64)[order],
+            touched_values=np.asarray(tvals, np.float32)[order],
+        )
 
     def _merge_loop(
         self,
@@ -634,7 +686,7 @@ class OnlineStore:
         event_ts: np.ndarray,
         feats: np.ndarray,
         creation_ts: int,
-    ) -> dict:
+    ) -> MergeStats:
         """Retained reference: the per-row sequential Algorithm-2 loop.
 
         Decision semantics are the original row-at-a-time implementation.

@@ -37,13 +37,18 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Optional
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.keys import KEY_SPACE_BITS, shard_coordinate
 
 __all__ = [
     "ReplicationPolicy",
     "Region",
     "GeoTopology",
     "GeoPlacement",
+    "ShardMap",
     "RegionDownError",
     "ComplianceError",
 ]
@@ -244,3 +249,127 @@ class GeoPlacement:
             healthy, key=lambda r: (self.topology.latency(prev, r), r)
         )
         return self.home_region
+
+
+class ShardMap:
+    """Hash-range partition of the encoded entity keyspace onto home
+    regions — the placement half of active-active multi-home writes.
+
+    ``keys.encode_keys`` mixes every entity key uniformly into
+    ``[0, 2**KEY_SPACE_BITS)``; this map cuts that interval into contiguous
+    ranges (``bounds`` holds the interior cut points) and assigns each range
+    a HOME region (``owners``).  Ownership is a pure function of the encoded
+    key — ``searchsorted`` over the fixed bounds — so every writer in every
+    region routes a key identically with no placement table to consult.
+
+    The bounds are FIXED at construction; rebalance (region join/leave,
+    per-shard failover) only rewrites ``owners`` and bumps ``version``, so
+    ownership of every key outside the moved range is stable across any
+    sequence of reassignments — the property the shard-routing suite sweeps.
+    """
+
+    KEY_SPACE = 1 << KEY_SPACE_BITS
+
+    def __init__(self, bounds: Sequence[int], owners: Sequence[str]) -> None:
+        self.bounds = np.asarray(list(bounds), np.uint64)
+        self.owners = list(owners)
+        if len(self.owners) != len(self.bounds) + 1:
+            raise ValueError(
+                f"{len(self.bounds)} interior bounds need "
+                f"{len(self.bounds) + 1} owners, got {len(self.owners)}"
+            )
+        if len(self.bounds):
+            b = self.bounds.astype(object)
+            if min(b) <= 0 or max(b) >= self.KEY_SPACE:
+                raise ValueError("bounds must lie strictly inside the keyspace")
+            if any(x >= y for x, y in zip(b, b[1:])):
+                raise ValueError("bounds must be strictly ascending")
+        self.version = 0
+
+    @classmethod
+    def even(cls, regions: Sequence[str], num_shards: Optional[int] = None):
+        """Equal-width ranges, one per region round-robin (the default:
+        ``num_shards == len(regions)`` gives each region exactly one
+        range)."""
+        regions = list(regions)
+        if not regions:
+            raise ValueError("need at least one region")
+        n = num_shards if num_shards is not None else len(regions)
+        if n < 1:
+            raise ValueError("need at least one shard")
+        step = cls.KEY_SPACE // n
+        bounds = [step * i for i in range(1, n)]
+        owners = [regions[i % len(regions)] for i in range(n)]
+        return cls(bounds, owners)
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.owners)
+
+    def shard_of(self, keys: np.ndarray) -> np.ndarray:
+        """Shard id of each encoded key — one ``searchsorted`` over the
+        fixed interior bounds, in the uniform ``keys.shard_coordinate``
+        space (raw encoded keys cluster low when ids are small; the
+        coordinate never does)."""
+        keys = np.asarray(keys, np.int64)
+        if len(keys) and keys.min() < 0:
+            raise ValueError("shard routing requires encoded (non-negative) keys")
+        return np.searchsorted(self.bounds, shard_coordinate(keys), side="right")
+
+    def owner_of(self, shard: int) -> str:
+        return self.owners[shard]
+
+    def shard_range(self, shard: int) -> tuple[int, int]:
+        """Half-open ``[lo, hi)`` range of one shard, in the
+        ``keys.shard_coordinate`` space (the same space ``bounds`` cuts and
+        the delta-bootstrap ``key_range`` filter masks on)."""
+        lo = int(self.bounds[shard - 1]) if shard > 0 else 0
+        hi = (
+            int(self.bounds[shard])
+            if shard < len(self.bounds)
+            else self.KEY_SPACE
+        )
+        return lo, hi
+
+    def owned_shards(self, region: str) -> list[int]:
+        return [i for i, o in enumerate(self.owners) if o == region]
+
+    def regions(self) -> list[str]:
+        """Distinct owner regions, in first-shard order."""
+        seen: list[str] = []
+        for o in self.owners:
+            if o not in seen:
+                seen.append(o)
+        return seen
+
+    def assign(self, shard: int, region: str) -> None:
+        """Reassign one range to a new home — the ShardMap cutover step of
+        rebalance/per-shard failover.  Bounds never move; only this shard's
+        ownership changes."""
+        if not 0 <= shard < self.num_shards:
+            raise ValueError(f"no shard {shard}")
+        self.owners[shard] = region
+        self.version += 1
+
+    def split_by_owner(self, keys: np.ndarray) -> dict[str, np.ndarray]:
+        """Row indices of ``keys`` grouped by owning region — the write-path
+        splitter: each group is the slice the writer applies locally (its
+        own region) or forwards to the range's home."""
+        shards = self.shard_of(keys)
+        out: dict[str, np.ndarray] = {}
+        for sid in np.unique(shards):
+            region = self.owners[int(sid)]
+            idx = np.flatnonzero(shards == sid)
+            out[region] = (
+                np.concatenate([out[region], idx]) if region in out else idx
+            )
+        # a region owning several ranges gets ONE slice in arrival order, so
+        # the forwarded sub-batch replays the caller's row order exactly
+        return {r: np.sort(idx) for r, idx in out.items()}
+
+    def as_dict(self) -> dict:
+        return {
+            "bounds": [int(b) for b in self.bounds],
+            "owners": list(self.owners),
+            "version": self.version,
+        }

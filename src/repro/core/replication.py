@@ -131,15 +131,50 @@ fresh stores + delta bootstrap of both planes + cursor at the cut, so a
 region whose stores were lost at promotion rejoins as a first-class
 replica instead of being dropped forever.
 
-``GeoFeatureStore`` is the read/write router on top: writes (materialization
-ticks, backfills) go to the home region's ``FeatureStore``; online reads are
-served by the nearest IN-SYNC replica (replication lag at most
+Multi-home write path & rebalance (active-active)
+-------------------------------------------------
+``MultiHomeGeoStore`` (core/multihome.py) runs this machinery
+ACTIVE-ACTIVE: a ``regions.ShardMap`` hash-partitions the encoded keyspace
+into ranges, each range homed in one region, and every region runs its OWN
+``GeoReplicator`` + ``ReplicationLog`` with all other regions as replicas.
+A write landing anywhere splits by owning range — owned slices merge
+locally, foreign slices FORWARD to the range's home — so each row is
+published by exactly one log and the delivery machinery above applies per
+shard-home log unchanged.
+
+The echo hazard is the new failure mode: every region is simultaneously a
+publisher (its own log) and a replica (everyone else's), and replica-side
+``merge_reduced`` fires the same ``merge_listeners`` a home merge does.
+The shard filter in ``_on_home_merge``/``_on_home_offline_merge`` breaks
+the loop: a replicator with a ``shard_map`` publishes ONLY the key slice
+its home region owns, so applying another home's batch publishes nothing.
+Convergence follows from the same per-plane idempotence as above — all
+regions drain to byte-identical online and chunk-set-identical offline
+state no matter where the writes landed.
+
+Failover is PER-RANGE: losing a region promotes only its owned ranges —
+the dead home's log replays its un-acked suffix into the nearest in-sync
+replica (``promote``), the ShardMap reassigns just those ranges, and the
+drained-dry log retires; every other range's home is untouched.  Rebalance
+(region join/leave) reuses the delta-bootstrap path range-filtered
+(``bootstrap_delta(key_range=...)``): drain the source log dry, stream the
+moving range, cut the ShardMap over, converge.  The cutover window admits
+one bounded echo (an in-flight moved-range batch re-published by the new
+owner) — idempotence absorbs it; draining the source dry first makes it
+not happen at all.
+
+``GeoFeatureStore`` is the SINGLE-HOME read/write router on top (one home
+region, ``shard_map=None``, no write splitting): writes (materialization
+ticks, backfills) go to the home region's ``FeatureStore``; online reads
+are served by the nearest IN-SYNC replica (replication lag at most
 ``max_lag_batches``), falling back to the home store; per-replica and
 per-plane lag / staleness land in the health monitor.  ``failover()``
 re-points BOTH of the home ``FeatureStore``'s planes at the promoted
 region's stores, so materialization and training reads resume against the
 new primary without skew.  Geo-fenced home regions refuse replication
-(``ComplianceError``, §4.1.2) exactly as placement does.
+(``ComplianceError``, §4.1.2) exactly as placement does.  Both routers
+implement the one ``facade.StoreFacade`` surface serving, examples, and
+benchmarks program against.
 """
 
 from __future__ import annotations
@@ -156,7 +191,13 @@ from repro.core.channel import Channel, DeliveryError, InProcessChannel, mix64
 from repro.core.featurestore import FeatureStore
 from repro.core.offline_store import CREATION_TS, EVENT_TS, OfflineStore
 from repro.core.online_store import OnlineStore
-from repro.core.regions import GeoTopology, RegionDownError, ReplicationPolicy
+from repro.core.keys import shard_coordinate
+from repro.core.regions import (
+    GeoTopology,
+    RegionDownError,
+    ReplicationPolicy,
+    ShardMap,
+)
 
 __all__ = [
     "DEFAULT_COMPRESS_LEVEL",
@@ -166,9 +207,13 @@ __all__ = [
     "DeliveryState",
     "GeoFeatureStore",
     "GeoReplicator",
+    "LagStats",
+    "PlaneLag",
+    "PlaneShip",
     "ReplicatedBatch",
     "ReplicationLog",
     "ReplicationLogFull",
+    "ShipLedger",
 ]
 
 #: default zlib level for the wire codec (core/wire.py re-exports it); the
@@ -296,6 +341,133 @@ def _frozen_copy(a: np.ndarray, dtype=None) -> np.ndarray:
     out = np.array(a, dtype=dtype, copy=True)
     out.flags.writeable = False
     return out
+
+
+@dataclasses.dataclass(frozen=True)
+class PlaneLag:
+    """Un-acked backlog of one store plane (online serving vs offline
+    history) toward one replica."""
+
+    batches: int = 0
+    rows: int = 0
+
+    def as_dict(self) -> dict:
+        return {"batches": self.batches, "rows": self.rows}
+
+
+@dataclasses.dataclass(frozen=True)
+class LagStats:
+    """Replication lag of one replica: combined un-acked counts, per-plane
+    breakdown, and staleness in clock units.  Frozen — a lag reading is a
+    snapshot; the multi-home aggregate extends the schema by SUMMING
+    readings across shard-home logs (``__add__``) instead of growing more
+    string keys."""
+
+    batches: int = 0
+    rows: int = 0
+    staleness_ms: int = 0
+    oldest_pending_creation_ts: Optional[int] = None
+    online: PlaneLag = PlaneLag()
+    offline: PlaneLag = PlaneLag()
+
+    @property
+    def planes(self) -> dict:
+        return {"online": self.online, "offline": self.offline}
+
+    def __add__(self, other: "LagStats") -> "LagStats":
+        oldest = [
+            t
+            for t in (
+                self.oldest_pending_creation_ts,
+                other.oldest_pending_creation_ts,
+            )
+            if t is not None
+        ]
+        return LagStats(
+            batches=self.batches + other.batches,
+            rows=self.rows + other.rows,
+            staleness_ms=max(self.staleness_ms, other.staleness_ms),
+            oldest_pending_creation_ts=min(oldest) if oldest else None,
+            online=PlaneLag(
+                self.online.batches + other.online.batches,
+                self.online.rows + other.online.rows,
+            ),
+            offline=PlaneLag(
+                self.offline.batches + other.offline.batches,
+                self.offline.rows + other.offline.rows,
+            ),
+        )
+
+    def as_dict(self) -> dict:
+        return {
+            "batches": self.batches,
+            "rows": self.rows,
+            "staleness_ms": self.staleness_ms,
+            "oldest_pending_creation_ts": self.oldest_pending_creation_ts,
+            "planes": {p: d.as_dict() for p, d in self.planes.items()},
+        }
+
+
+@dataclasses.dataclass
+class PlaneShip:
+    """Per-plane slice of one replica link's shipping ledger."""
+
+    frames: int = 0
+    batches: int = 0
+    rows: int = 0
+    bytes: int = 0
+    raw_bytes: int = 0
+
+    def as_dict(self) -> dict:
+        return {
+            "frames": self.frames,
+            "batches": self.batches,
+            "rows": self.rows,
+            "bytes": self.bytes,
+            "raw_bytes": self.raw_bytes,
+        }
+
+
+@dataclasses.dataclass
+class ShipLedger:
+    """One replica link's shipping ledger.  ``bytes`` is the TRUE wire size
+    (post-compression frame bytes, the size the WAN bandwidth model
+    prices); ``raw_bytes`` the serialized payload before compression;
+    ``frames`` counts wire messages (a coalesced frame carries several
+    batches).  MUTABLE by design — these are running counters charged from
+    the transmit/apply paths — unlike the frozen snapshot stats
+    (``LagStats``/``MergeStats``)."""
+
+    frames: int = 0
+    batches: int = 0
+    rows: int = 0
+    bytes: int = 0
+    raw_bytes: int = 0
+    ms: float = 0.0
+    online: PlaneShip = dataclasses.field(default_factory=PlaneShip)
+    offline: PlaneShip = dataclasses.field(default_factory=PlaneShip)
+
+    def plane(self, name: str) -> PlaneShip:
+        if name == "online":
+            return self.online
+        if name == "offline":
+            return self.offline
+        raise KeyError(name)
+
+    @property
+    def by_plane(self) -> dict:
+        return {"online": self.online, "offline": self.offline}
+
+    def as_dict(self) -> dict:
+        return {
+            "frames": self.frames,
+            "batches": self.batches,
+            "rows": self.rows,
+            "bytes": self.bytes,
+            "raw_bytes": self.raw_bytes,
+            "ms": self.ms,
+            "by_plane": {p: d.as_dict() for p, d in self.by_plane.items()},
+        }
 
 
 class ReplicationLog:
@@ -438,7 +610,7 @@ class ReplicationLog:
             dropped += 1
         return dropped
 
-    def lag(self, replica: str) -> dict:
+    def lag(self, replica: str) -> LagStats:
         """Un-acked batch/row counts (combined + per plane) and the oldest
         pending creation_ts.  The combined counts are what the in-sync read
         gate consumes; the per-plane breakdown feeds monitoring, so an
@@ -446,20 +618,21 @@ class ReplicationLog:
         training history) is visible, not averaged away."""
         pend = self.pending(replica)
         planes = {
-            p: {
-                "batches": sum(1 for b in pend if b.plane == p),
-                "rows": int(sum(b.rows for b in pend if b.plane == p)),
-            }
+            p: PlaneLag(
+                batches=sum(1 for b in pend if b.plane == p),
+                rows=int(sum(b.rows for b in pend if b.plane == p)),
+            )
             for p in ("online", "offline")
         }
-        return {
-            "batches": len(pend),
-            "rows": int(sum(b.rows for b in pend)),
-            "oldest_pending_creation_ts": (
+        return LagStats(
+            batches=len(pend),
+            rows=int(sum(b.rows for b in pend)),
+            oldest_pending_creation_ts=(
                 min(b.creation_ts for b in pend) if pend else None
             ),
-            "planes": planes,
-        }
+            online=planes["online"],
+            offline=planes["offline"],
+        )
 
 
 class GeoReplicator:
@@ -499,9 +672,16 @@ class GeoReplicator:
         channel: Optional[Channel] = None,
         policy: Optional[DeliveryPolicy] = None,
         on_evict: Optional[Callable[[str], None]] = None,
+        shard_map: Optional[ShardMap] = None,
     ) -> None:
         self.topology = topology
         self.home_region = home_region
+        #: multi-home publish filter: when set, the home-merge listeners
+        #: publish ONLY the key slice this home's shards own — a replica
+        #: applying another home's batch therefore publishes nothing, which
+        #: is what keeps the active-active mesh echo-free (module docstring,
+        #: "Multi-home write path").  None = single-home, publish everything.
+        self.shard_map = shard_map
         self.log = log if log is not None else ReplicationLog()
         self.clock = clock or (lambda: 0)
         self.monitor = monitor
@@ -561,40 +741,73 @@ class GeoReplicator:
                     self.monitor.system.inc("replication/log_force_appends")
         return batch.seq
 
-    def _on_home_merge(self, spec: FeatureSetSpec, stats: dict) -> None:
+    def _owned_slice(self, keys: np.ndarray) -> Optional[np.ndarray]:
+        """Multi-home publish filter: row indices of ``keys`` owned by this
+        home's shards, or None when no shard map is set (single-home —
+        publish everything).  An all-owned batch returns the full index
+        range, a fully-foreign batch (a replica applying another home's
+        writes) an empty one."""
+        if self.shard_map is None:
+            return None
+        shards = self.shard_map.shard_of(keys)
+        mine = np.array(
+            [o == self.home_region for o in self.shard_map.owners], bool
+        )
+        return np.flatnonzero(mine[shards])
+
+    def _on_home_merge(self, spec: FeatureSetSpec, stats) -> None:
         """Home ONLINE-store merge listener: append the batch's reduced
-        winning writes to the log and annotate the stats with the seq."""
+        winning writes to the log and annotate the stats with the seq.
+        Under a shard map, only the home-owned key slice is published
+        (``_owned_slice``) — the multi-home echo breaker."""
         self._specs[spec.key] = spec
         keys = stats.get("touched_keys")
         if keys is None or len(keys) == 0:
-            stats["replication_seq"] = None  # pure no-op batch: nothing ships
+            stats.annotate_replication_seq(None)  # pure no-op batch
             return
-        payload = (
-            spec.key,
-            stats["creation_ts"],
-            keys,
-            stats["touched_event_ts"],
-            stats["touched_values"],
-        )
-        stats["replication_seq"] = self._publish(payload, "online")
+        event_ts = stats["touched_event_ts"]
+        values = stats["touched_values"]
+        owned = self._owned_slice(keys)
+        if owned is not None:
+            if len(owned) == 0:
+                stats.annotate_replication_seq(None)  # fully-foreign batch
+                return
+            if len(owned) < len(keys):
+                keys = keys[owned]
+                event_ts = event_ts[owned]
+                values = values[owned]
+        payload = (spec.key, stats["creation_ts"], keys, event_ts, values)
+        stats.annotate_replication_seq(self._publish(payload, "online"))
 
     def _on_home_offline_merge(self, spec: FeatureSetSpec, stats: dict) -> None:
         """Home OFFLINE-store merge listener: ship the rows the merge
-        actually inserted (post full-key dedup) as an offline-plane batch."""
+        actually inserted (post full-key dedup) as an offline-plane batch —
+        shard-filtered like the online listener."""
         self._specs[spec.key] = spec
         keys = stats.get("inserted_keys")
         if keys is None or len(keys) == 0:
             stats["replication_seq"] = None  # fully-deduped batch: no-op
             return
+        event_ts = stats["inserted_event_ts"]
+        columns = stats["inserted_columns"]
+        owned = self._owned_slice(keys)
+        if owned is not None:
+            if len(owned) == 0:
+                stats["replication_seq"] = None
+                return
+            if len(owned) < len(keys):
+                keys = keys[owned]
+                event_ts = event_ts[owned]
+                columns = {k: v[owned] for k, v in columns.items()}
         payload = (
             spec.key,
             stats["creation_ts"],
             keys,
-            stats["inserted_event_ts"],
+            event_ts,
             np.empty((len(keys), 0), np.float32),
         )
         stats["replication_seq"] = self._publish(
-            payload, "offline", columns=stats["inserted_columns"]
+            payload, "offline", columns=columns
         )
 
     # -- replica membership --------------------------------------------------
@@ -608,23 +821,8 @@ class GeoReplicator:
         replicas) or the shared default."""
         return self.channels.get(region, self.channel)
 
-    def _new_ship_ledger(self) -> dict:
-        # "bytes" is the TRUE wire size (post-compression frame bytes, the
-        # size the WAN bandwidth model prices); "raw_bytes" the serialized
-        # payload before compression; "frames" counts wire messages (a
-        # coalesced frame carries several batches)
-        return {
-            "frames": 0,
-            "batches": 0,
-            "rows": 0,
-            "bytes": 0,
-            "raw_bytes": 0,
-            "ms": 0.0,
-            "by_plane": {
-                p: {"frames": 0, "batches": 0, "rows": 0, "bytes": 0, "raw_bytes": 0}
-                for p in ("online", "offline")
-            },
-        }
+    def _new_ship_ledger(self) -> ShipLedger:
+        return ShipLedger()
 
     def add_replica(
         self,
@@ -704,7 +902,12 @@ class GeoReplicator:
         return cut
 
     def bootstrap_delta(
-        self, region: str, spec: FeatureSetSpec, *, chunk_rows: int = 65_536
+        self,
+        region: str,
+        spec: FeatureSetSpec,
+        *,
+        chunk_rows: int = 65_536,
+        key_range: Optional[tuple[int, int]] = None,
     ) -> dict:
         """Stream one table's home state AS OF the replica's registration
         cut into the new replica, in bounded ``chunk_rows`` pieces — the
@@ -717,10 +920,25 @@ class GeoReplicator:
         no-op.  Every chunk crosses the WAN as a wire frame (seq = the
         out-of-log ``BOOTSTRAP_SEQ`` sentinel, never acked); offline chunks
         span many merges, so their per-row creation_ts rides along as a
-        wire column the apply side peels off.  Returns per-plane
-        bootstrapped row counts."""
+        wire column the apply side peels off.
+
+        ``key_range`` — half-open ``[lo, hi)`` over the uniform
+        ``keys.shard_coordinate`` of encoded keys (the space ``ShardMap``
+        bounds cut) — streams only that slice of both planes: the
+        multi-home rebalance path ("stream the moving range") reuses this
+        bootstrap with one shard's ``ShardMap.shard_range`` instead of
+        re-shipping whole tables.  Returns per-plane bootstrapped row
+        counts."""
         self._specs[spec.key] = spec
         out = {"online_rows": 0, "offline_rows": 0, "chunks": 0}
+
+        def in_range(keys: np.ndarray) -> Optional[np.ndarray]:
+            if key_range is None:
+                return None
+            lo, hi = key_range
+            coord = shard_coordinate(keys)
+            return (coord >= np.uint64(lo)) & (coord < np.uint64(hi))
+
         home_online = self.stores[self.home_region]
         store = self.stores.get(region)
         is_remote = region in self.remote
@@ -732,6 +950,9 @@ class GeoReplicator:
             if store is not None:
                 store.register(spec)
             dump = home_online.dump_all(spec.name, spec.version)
+            mask = in_range(dump["__key__"]) if len(dump) else None
+            if mask is not None:
+                dump = dump.take(np.flatnonzero(mask))
             if len(dump):
                 keys = dump["__key__"]
                 event_ts = dump[EVENT_TS]
@@ -766,6 +987,9 @@ class GeoReplicator:
             for chunk in home_offline.export_chunks(
                 spec.name, spec.version, max_rows=chunk_rows
             ):
+                mask = in_range(chunk["__key__"]) if len(chunk) else None
+                if mask is not None:
+                    chunk = chunk.take(np.flatnonzero(mask))
                 if len(chunk) == 0:
                     continue
                 # CREATION_TS stays IN the columns payload: bootstrap chunks
@@ -829,14 +1053,14 @@ class GeoReplicator:
         """TRANSMIT-side ledger: the home pays for the send whether or not
         it lands, so retries show up as byte amplification."""
         ship = self.shipped[region]
-        ship["frames"] += 1
-        ship["bytes"] += frame.wire_nbytes
-        ship["raw_bytes"] += frame.raw_nbytes
-        ship["ms"] += latency_ms
-        plane = ship["by_plane"][frame.plane]
-        plane["frames"] += 1
-        plane["bytes"] += frame.wire_nbytes
-        plane["raw_bytes"] += frame.raw_nbytes
+        ship.frames += 1
+        ship.bytes += frame.wire_nbytes
+        ship.raw_bytes += frame.raw_nbytes
+        ship.ms += latency_ms
+        plane = ship.plane(frame.plane)
+        plane.frames += 1
+        plane.bytes += frame.wire_nbytes
+        plane.raw_bytes += frame.raw_nbytes
 
     def _note_sent_seqs(self, region: str, frame) -> None:
         """Retry detection: any logged seq at or below the high-water mark
@@ -904,11 +1128,11 @@ class GeoReplicator:
                 if s != wire.BOOTSTRAP_SEQ:
                     self.log.ack(region, s)
         ship = self.shipped[region]
-        plane = ship["by_plane"][frame.plane]
-        ship["batches"] += len(ack.seqs)
-        ship["rows"] += ack.rows
-        plane["batches"] += len(ack.seqs)
-        plane["rows"] += ack.rows
+        plane = ship.plane(frame.plane)
+        ship.batches += len(ack.seqs)
+        ship.rows += ack.rows
+        plane.batches += len(ack.seqs)
+        plane.rows += ack.rows
         if self.monitor is not None:
             self.monitor.record_replication_ship(
                 ack.rows,
@@ -960,7 +1184,7 @@ class GeoReplicator:
         self._charge_transmit(region, frame, delivery.latency_ms)
         self._note_sent_seqs(region, frame)
         ship = self.shipped[region]
-        plane = ship["by_plane"][frame.plane]
+        plane = ship.plane(frame.plane)
         ack_ok = (
             not delivery.ack_lost
             and delivery.latency_ms <= self.policy.ack_timeout_ms
@@ -992,10 +1216,10 @@ class GeoReplicator:
                     if ack_ok and batch.seq != wire.BOOTSTRAP_SEQ:
                         self.log.ack(region, batch.seq)
         finally:
-            ship["batches"] += len(applied)
-            ship["rows"] += applied_rows
-            plane["batches"] += len(applied)
-            plane["rows"] += applied_rows
+            ship.batches += len(applied)
+            ship.rows += applied_rows
+            plane.batches += len(applied)
+            plane.rows += applied_rows
             if self.monitor is not None:
                 self.monitor.record_replication_ship(
                     applied_rows,
@@ -1087,7 +1311,7 @@ class GeoReplicator:
                 if entry is None:
                     continue  # completion for a frame another pass forgot
                 _tok, frame = entry
-                self.shipped[region]["ms"] += delivery.latency_ms
+                self.shipped[region].ms += delivery.latency_ms
                 stats = self._absorb_remote(region, frame, delivery)
                 if stats is None:
                     failed = True
@@ -1299,29 +1523,24 @@ class GeoReplicator:
             return 0
         return self.log.pending_count(region)
 
-    def lag(self, region: str) -> dict:
+    def lag(self, region: str) -> LagStats:
         """Replication lag of one region: un-acked batches/rows (combined +
         per plane) plus staleness in clock units (0 when fully caught up).
         The home region is by definition in sync."""
         if region == self.home_region:
-            return {
-                "batches": 0,
-                "rows": 0,
-                "staleness_ms": 0,
-                "planes": {
-                    p: {"batches": 0, "rows": 0} for p in ("online", "offline")
-                },
-            }
+            return LagStats()
         raw = self.log.lag(region)
-        oldest = raw.pop("oldest_pending_creation_ts")
-        raw["staleness_ms"] = (
-            max(0, int(self.clock()) - oldest) if oldest is not None else 0
+        oldest = raw.oldest_pending_creation_ts
+        return dataclasses.replace(
+            raw,
+            staleness_ms=(
+                max(0, int(self.clock()) - oldest) if oldest is not None else 0
+            ),
         )
-        return raw
 
     def _record_lag(self, region: str) -> None:
         if self.monitor is not None:
-            self.monitor.record_replication_lag(region, **self.lag(region))
+            self.monitor.record_replication_lag(region, self.lag(region))
 
     # -- fail-over replay -------------------------------------------------------
     def _adopt_remote(self, region: str) -> None:
@@ -1506,9 +1725,36 @@ class GeoFeatureStore:
     def home_region(self) -> str:
         return self.replicator.home_region
 
-    def __getattr__(self, name: str):
-        # registry/asset/materialization surface delegates to the home store
-        return getattr(self.fs, name)
+    # -- explicit home-store delegation ---------------------------------------
+    # (formerly a __getattr__ passthrough: every delegated name is now
+    # spelled out, so the geo surface IS the visible API — StoreFacade plus
+    # the home store's asset/clock/monitoring handles)
+    @property
+    def registry(self):
+        return self.fs.registry
+
+    @property
+    def monitor(self):
+        return self.fs.monitor
+
+    @property
+    def clock(self):
+        return self.fs.clock
+
+    def register_source(self, source) -> None:
+        self.fs.register_source(source)
+
+    def create_entity(self, entity):
+        return self.fs.create_entity(entity)
+
+    def advance_clock(self, to: int) -> None:
+        self.fs.advance_clock(to)
+
+    def check_consistency(self, name: str, version: int):
+        return self.fs.check_consistency(name, version)
+
+    def get_offline_features(self, *args, **kwargs):
+        return self.fs.get_offline_features(*args, **kwargs)
 
     # -- membership ----------------------------------------------------------
     def add_replica(self, region: str, *, chunk_rows: int = 65_536) -> OnlineStore:
@@ -1586,6 +1832,28 @@ class GeoFeatureStore:
             self.drain()
         return stats
 
+    def write_batch(
+        self,
+        name: str,
+        version: int,
+        frame,
+        *,
+        creation_ts: Optional[int] = None,
+        region: Optional[str] = None,
+    ) -> dict:
+        """Facade write surface: single-home geo — every write lands in the
+        home region regardless of where it originated (``region`` must be
+        the home when given; multi-home splitting is ``MultiHomeGeoStore``)."""
+        if region is not None and region != self.home_region:
+            raise ValueError(
+                f"single-home geo store writes land in {self.home_region}; "
+                f"got region={region!r} (want MultiHomeGeoStore?)"
+            )
+        stats = self.fs.write_batch(name, version, frame, creation_ts=creation_ts)
+        if self.auto_drain:
+            self.drain()
+        return stats
+
     def drain(self, region: Optional[str] = None) -> dict:
         out = self.replicator.drain(region)
         if region is None:
@@ -1643,7 +1911,7 @@ class GeoFeatureStore:
             self.mark_down(region)
             raise
 
-    def lag(self, region: str) -> dict:
+    def lag(self, region: str) -> LagStats:
         return self.replicator.lag(region)
 
     # -- reads (nearest in-sync region) ----------------------------------------
@@ -1697,7 +1965,7 @@ class GeoFeatureStore:
     def mark_up(self, region: str) -> None:
         self.placement.mark_up(region)
 
-    def failover(self) -> Optional[dict]:
+    def failover(self, region: Optional[str] = None) -> Optional[dict]:
         """Promote the nearest healthy replica when the home region is down:
         placement re-points (regions.py), the replicator replays the
         promoted replica's un-acked suffix — BOTH planes — and the home
@@ -1707,8 +1975,16 @@ class GeoFeatureStore:
         ex-home leaves the serving set entirely (its stores are gone; a
         LATER failover must never promote it) — if it recovers, ``rejoin``
         re-admits it via delta bootstrap.  Returns promotion info, or None
-        when the home region is healthy."""
+        when the home region is healthy.
+
+        ``region`` (facade surface) names the lost region; a single-home
+        store only ever loses its home, so anything else is an error."""
         old_home = self.home_region
+        if region is not None and region != old_home:
+            raise ValueError(
+                f"single-home geo store can only fail over its home "
+                f"{old_home}; got {region!r}"
+            )
         new_home = self.placement.failover()
         if new_home is None:
             return None

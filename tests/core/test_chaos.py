@@ -516,10 +516,10 @@ def test_partial_frame_apply_failure_keeps_prefix_acks_and_ledger():
     with pytest.raises(RuntimeError, match="mid-frame"):
         repl.drain("r")
     ship = repl.shipped["r"]
-    assert ship["frames"] == 1
-    assert ship["batches"] == 1  # ONLY the applied prefix — not 0, not 3
-    assert ship["rows"] > 0
-    assert ship["bytes"] > 0  # the transmit itself was charged
+    assert ship.frames == 1
+    assert ship.batches == 1  # ONLY the applied prefix — not 0, not 3
+    assert ship.rows > 0
+    assert ship.bytes > 0  # the transmit itself was charged
     assert repl.log.is_acked("r", 0)
     assert not repl.log.is_acked("r", 1)
     assert repl.log.cursors["r"] == 1

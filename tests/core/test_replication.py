@@ -29,6 +29,7 @@ from repro.core.online_store import OnlineStore
 from repro.core.regions import ComplianceError, GeoTopology, Region, RegionDownError
 from repro.core.replication import (
     GeoFeatureStore,
+    PlaneLag,
     ReplicationLog,
     ReplicationLogFull,
 )
@@ -210,34 +211,28 @@ def test_log_lag_under_out_of_order_acks():
     log.register_replica("r")
     for i in range(4):
         _log_batch(log, i)
-    assert log.lag("r") == {
-        "batches": 4,
-        "rows": 12,
-        "oldest_pending_creation_ts": 1_000,
-        "planes": {
-            "online": {"batches": 4, "rows": 12},
-            "offline": {"batches": 0, "rows": 0},
-        },
+    lag = log.lag("r")
+    assert (lag.batches, lag.rows, lag.oldest_pending_creation_ts) == (4, 12, 1_000)
+    assert lag.planes == {
+        "online": PlaneLag(batches=4, rows=12),
+        "offline": PlaneLag(),
     }
     log.ack("r", 2)  # out of order: cursor must NOT advance
     assert log.cursors["r"] == 0
-    assert log.lag("r")["batches"] == 3
+    assert log.lag("r").batches == 3
     assert [b.seq for b in log.pending("r")] == [0, 1, 3]
     log.ack("r", 0)  # contiguous prefix {0} + ahead {2}: cursor -> 1
     assert log.cursors["r"] == 1
     log.ack("r", 1)  # closes the gap: cursor jumps over the acked 2
     assert log.cursors["r"] == 3
-    assert log.lag("r") == {
-        "batches": 1,
-        "rows": 3,
-        "oldest_pending_creation_ts": 1_003,
-        "planes": {
-            "online": {"batches": 1, "rows": 3},
-            "offline": {"batches": 0, "rows": 0},
-        },
+    lag = log.lag("r")
+    assert (lag.batches, lag.rows, lag.oldest_pending_creation_ts) == (1, 3, 1_003)
+    assert lag.planes == {
+        "online": PlaneLag(batches=1, rows=3),
+        "offline": PlaneLag(),
     }
     log.ack("r", 3)
-    assert log.lag("r")["batches"] == 0
+    assert log.lag("r").batches == 0
     # re-acking below the cursor is a harmless no-op (re-delivery)
     log.ack("r", 1)
     assert log.cursors["r"] == 4
@@ -360,7 +355,7 @@ def test_drain_encodes_shared_runs_once_for_aligned_replicas(monkeypatch):
     assert len(calls) == 1  # one coalesced run, two replicas, one encode
     assert_dumps_identical(home, a, spec, "r1")
     assert_dumps_identical(home, b, spec, "r2")
-    assert repl.shipped["r1"]["bytes"] == repl.shipped["r2"]["bytes"]
+    assert repl.shipped["r1"].bytes == repl.shipped["r2"].bytes
 
 
 def test_register_replica_rejects_out_of_range_cursor():
@@ -426,14 +421,14 @@ def test_log_mixed_plane_truncation_counts_both_planes():
         _log_batch(log, 2)
     assert [b.plane for b in log.pending("r")] == ["offline"]
     lag = log.lag("r")
-    assert lag["planes"] == {
-        "online": {"batches": 0, "rows": 0},
-        "offline": {"batches": 1, "rows": 2},
+    assert lag.planes == {
+        "online": PlaneLag(),
+        "offline": PlaneLag(batches=1, rows=2),
     }
     log.ack("r", 0)  # both planes acked -> append truncates the prefix
     _log_batch(log, 2)
     assert [b.seq for b in log.pending("r")] == [2]
-    assert log.lag("r")["planes"]["offline"] == {"batches": 0, "rows": 0}
+    assert log.lag("r").offline == PlaneLag()
 
 
 # -- geo feature store: routing, lag gating, compliance -----------------------
@@ -450,7 +445,7 @@ def test_reads_gate_on_replication_lag():
     g.tick(now=2 * HOUR)
     ids = [np.arange(10, dtype=np.int64)]
     # replica lags: reads from 'near' must fall back to home (WAN latency)
-    assert g.lag("near")["batches"] > 0
+    assert g.lag("near").batches > 0
     _, _, route = g.get_online_features("act", 1, ids, consumer_region="near")
     assert route == {"region": "home", "modeled_ms": 30.0}
     # relaxing the staleness bound lets the lagging replica serve locally
@@ -488,7 +483,7 @@ def test_snapshot_bootstrap_of_late_replica():
     g.tick(now=3 * HOUR)  # home has state before any replica exists
     g.add_replica("near", chunk_rows=16)  # bounded delta chunks, not one dump
     spec = g.registry.get_feature_set("act", 1)
-    assert g.lag("near")["batches"] == 0  # snapshot cut at head, not replay
+    assert g.lag("near").batches == 0  # snapshot cut at head, not replay
     assert g.last_bootstrap["online_rows"] > 0
     assert g.last_bootstrap["offline_rows"] > 0
     assert g.last_bootstrap["chunks"] > 2  # actually streamed in pieces
@@ -538,7 +533,7 @@ def test_publisher_force_appends_when_dead_replica_pins_log():
     spec = g.registry.get_feature_set("act", 1)
     # the sync-drain fallback kept the healthy replica within one
     # append-window of home; an explicit drain closes the tail
-    assert g.lag("near")["batches"] <= len(g.log)
+    assert g.lag("near").batches <= len(g.log)
     g.drain("near")
     assert_dumps_identical(
         g.fs.online, g.replicator.stores["near"], spec, "healthy replica"
@@ -587,8 +582,8 @@ def test_offline_plane_replicates_on_drain():
     g.tick(now=2 * HOUR)
     spec = g.registry.get_feature_set("act", 1)
     lag = g.lag("near")
-    assert lag["planes"]["offline"]["batches"] > 0  # offline batches ship too
-    assert lag["planes"]["online"]["batches"] > 0
+    assert lag.offline.batches > 0  # offline batches ship too
+    assert lag.online.batches > 0
     gauges = g.fs.monitor.system.snapshot()["gauges"]
     assert gauges["replication/lag_batches/offline/near"] > 0
     g.drain()
@@ -682,7 +677,7 @@ def test_delta_bootstrap_interrupted_and_retried_is_idempotent():
     out = rep.bootstrap_delta("near", spec, chunk_rows=16)
     assert offline.num_rows("act", 1) == before
     assert out["offline_rows"] == before  # streamed again, all deduped
-    assert g.lag("near")["batches"] == 0
+    assert g.lag("near").batches == 0
 
 
 def test_rejoin_after_failover_converges_both_planes():
@@ -757,8 +752,8 @@ def test_two_region_scenario_with_failover_replay():
 
     # more materialization the replicas have NOT applied yet
     g.tick(now=6 * HOUR)
-    assert g.lag("near")["batches"] > 0
-    assert g.lag("near")["planes"]["offline"]["batches"] > 0
+    assert g.lag("near").batches > 0
+    assert g.lag("near").offline.batches > 0
     pre_failure = g.fs.online.dump_all("act", 1)
     pre_failure_off = g.fs.offline.canonical_history("act", 1)
 

@@ -380,7 +380,7 @@ def test_shipped_state_survives_the_wire_hop():
     for name in da.names:
         np.testing.assert_array_equal(da[name], db[name], err_msg=name)
     ship = repl.shipped["r"]
-    assert ship["batches"] == 4
-    assert ship["frames"] == 1  # one table, one plane: the run coalesced
-    assert 0 < ship["bytes"] <= ship["raw_bytes"]
-    assert ship["ms"] > 0  # the WAN model priced the wire size
+    assert ship.batches == 4
+    assert ship.frames == 1  # one table, one plane: the run coalesced
+    assert 0 < ship.bytes <= ship.raw_bytes
+    assert ship.ms > 0  # the WAN model priced the wire size
