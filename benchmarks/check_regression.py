@@ -74,8 +74,35 @@ def load_suite_result(path: Path, suite_name: str) -> dict:
     return data
 
 
+def require_phase(result: dict, phase: str, *, source: str) -> dict | list:
+    """The one accessor for every bench-phase extraction in this gate.
+
+    A missing phase means the bench section that produces it silently
+    stopped running upstream — exactly the vacuous-pass failure mode this
+    gate exists to prevent (PR 8: the gate passed whenever its input
+    artifact was missing).  A bare ``result[phase]`` dies with an opaque
+    KeyError; ``result.get(phase, {})`` quietly gates nothing.  This fails
+    loudly, names the gap, and refuses to proceed."""
+    if phase not in result:
+        present = ", ".join(sorted(result)) or "<empty>"
+        raise SystemExit(
+            f"{source}: bench phase {phase!r} is missing (present: {present}) "
+            f"— the section that produces it did not run; refusing to gate "
+            f"vacuously"
+        )
+    section = result[phase]
+    if not isinstance(section, (dict, list)):
+        raise SystemExit(
+            f"{source}: bench phase {phase!r} is {type(section).__name__}, "
+            f"not a mapping/sequence — the bench output format changed "
+            f"under the gate"
+        )
+    return section
+
+
 def check_transfer_bytes(cur: dict, base: dict, failures: list[str]) -> None:
-    c, b = cur["resident_cycle"], base["resident_cycle"]
+    c = require_phase(cur, "resident_cycle", source="current")
+    b = require_phase(base, "resident_cycle", source="baseline")
     tx = c["transfers"]
     if tx["device_uploads"] or tx["host_syncs"]:
         failures.append(f"resident cycle re-moved the table: {tx}")
@@ -85,9 +112,9 @@ def check_transfer_bytes(cur: dict, base: dict, failures: list[str]) -> None:
     else:
         print(f"  ok: resident cycle {cyc} B/cycle (committed {cyc_base})")
     base_rows = {}
-    for r in base["lookup_table"]:
+    for r in require_phase(base, "lookup_table", source="baseline"):
         base_rows[(r["entities"], r["batch"])] = r["kernel_get_bytes_per_batch"]
-    for row in cur["lookup_table"]:
+    for row in require_phase(cur, "lookup_table", source="current"):
         key = (row["entities"], row["batch"])
         if key not in base_rows:
             continue
@@ -103,7 +130,8 @@ def check_merge_throughput(
 ) -> float:
     """Gate the merge engines; returns the machine-speed calibration scale
     (this run's loop reference vs the baseline's) for downstream gates."""
-    c, b = cur["merge_engines"], base["merge_engines"]
+    c = require_phase(cur, "merge_engines", source="current")
+    b = require_phase(base, "merge_engines", source="baseline")
     cur_loop = c["loop"]["rows_per_s"]
     base_loop = b["loop"]["rows_per_s"]
     scale = min(1.0, cur_loop / base_loop)
@@ -132,7 +160,8 @@ def check_geo_replication(
     deliberately); the recorded compression ratio must not regress below
     break-even; replica-apply rows/s within the machine-calibrated
     tolerance, per plane."""
-    c, b = cur["throughput"], base["throughput"]
+    c = require_phase(cur, "throughput", source="current geo")
+    b = require_phase(base, "throughput", source="baseline geo")
     byte_fields = (
         "shipped_bytes",
         "shipped_raw_bytes",
@@ -180,12 +209,14 @@ def check_chaos(
     drain loop counts is seeded + logical-tick deterministic, so it is
     gated EXACTLY; the convergence/recovery booleans are re-asserted
     fresh; only goodput is wall-clock (calibrated tolerance)."""
-    c, b = cur["chaos"], base["chaos"]
+    c = require_phase(cur, "chaos", source="current geo")
+    b = require_phase(base, "chaos", source="baseline geo")
+    partition = require_phase(c, "partition", source="current chaos")
     for field in ("converged_identical",):
         if not c.get(field):
             failures.append(f"chaos {field} is no longer asserted true")
     for field in ("recovered", "detection_marked_region_down"):
-        if not c["partition"].get(field):
+        if not partition.get(field):
             failures.append(f"chaos partition {field} is no longer asserted true")
     drift = [
         k
@@ -232,7 +263,8 @@ def check_multi_home(
     the same tolerance as the wall-clock numbers so a routing bug that
     stops (or starts over-) forwarding fails the gate without pinning the
     hash itself."""
-    c, b = cur["multi_home"], base["multi_home"]
+    c = require_phase(cur, "multi_home", source="current geo")
+    b = require_phase(base, "multi_home", source="baseline geo")
     got_bytes, want_bytes = c["per_shard_shipped_bytes"], b["per_shard_shipped_bytes"]
     if got_bytes != want_bytes:
         failures.append(
@@ -253,7 +285,11 @@ def check_multi_home(
         ("online_identical", "rejoin_rebalance"),
         ("offline_identical", "rejoin_rebalance"),
     ):
-        scope = c if sub is None else c.get(sub, {})
+        scope = (
+            c
+            if sub is None
+            else require_phase(c, sub, source="current multi_home")
+        )
         if not scope.get(field):
             where = f"{sub}." if sub else ""
             failures.append(
@@ -286,7 +322,8 @@ def check_socket(cur: dict, base: dict, failures: list[str]) -> None:
     must beat the serialized (window=1) drain outright — the emulated
     round-trip dominates both walls, so the ratio is a property of the
     window, not of machine speed."""
-    c, b = cur["socket"], base["socket"]
+    c = require_phase(cur, "socket", source="current geo")
+    b = require_phase(base, "socket", source="baseline geo")
     for field in ("socket_state_identical", "socket_offline_state_identical"):
         if not c.get(field):
             failures.append(f"socket {field} is no longer asserted true")
@@ -300,10 +337,11 @@ def check_socket(cur: dict, base: dict, failures: list[str]) -> None:
         else:
             print(f"  ok: socket {field} {got} (exact match)")
     for mode in ("serialized", "pipelined"):
-        if c[mode]["nacks"] or c[mode]["timeouts"]:
+        m = require_phase(c, mode, source="current socket")
+        if m["nacks"] or m["timeouts"]:
             failures.append(
                 f"socket {mode} run was not clean: nacks="
-                f"{c[mode]['nacks']} timeouts={c[mode]['timeouts']}"
+                f"{m['nacks']} timeouts={m['timeouts']}"
             )
     speedup = c["pipeline_speedup_x"]
     if speedup <= 1.0:
@@ -337,20 +375,24 @@ def check_serving(
     CALIBRATED (wall-clock): closed-loop lookups/s per stack within
     ``tolerance`` of the committed baseline after the loop-engine
     machine-speed rescale."""
-    c, b = cur["closed_loop"], base["closed_loop"]
+    c = require_phase(cur, "closed_loop", source="current serving")
+    b = require_phase(base, "closed_loop", source="baseline serving")
+    base_overload = require_phase(base, "overload", source="baseline serving")
     ratio = c["kernel_over_host_x"]
     if ratio > 2.0:
         failures.append(f"serving kernel/host per-lookup ratio {ratio} > 2.0")
     else:
         print(f"  ok: serving kernel/host ratio {ratio}x (<= 2.0)")
     for stack in ("host", "kernel"):
-        mean_co = c[stack]["mean_coalesced_keys"]
+        sc = require_phase(c, stack, source="current serving closed_loop")
+        sb = require_phase(b, stack, source="baseline serving closed_loop")
+        mean_co = sc["mean_coalesced_keys"]
         if mean_co < 2_048:
             failures.append(
                 f"serving {stack} mean coalesced dispatch fell to {mean_co} "
                 f"keys (< 2048: out of the micro-batched regime)"
             )
-        got, want = c[stack]["cache_hit_rate"], b[stack]["cache_hit_rate"]
+        got, want = sc["cache_hit_rate"], sb["cache_hit_rate"]
         if got < want:
             failures.append(
                 f"serving {stack} cache hit rate dropped: {got} vs committed "
@@ -358,8 +400,8 @@ def check_serving(
             )
         else:
             print(f"  ok: serving {stack} hit rate {got} (committed {want})")
-        rate = c[stack]["lookups_per_s"]
-        floor = int(b[stack]["lookups_per_s"] * scale * (1.0 - tolerance))
+        rate = sc["lookups_per_s"]
+        floor = int(sb["lookups_per_s"] * scale * (1.0 - tolerance))
         if rate < floor:
             failures.append(
                 f"serving {stack} closed-loop dropped >{tolerance:.0%}: "
@@ -367,12 +409,12 @@ def check_serving(
             )
         else:
             print(f"  ok: serving {stack} {rate} lookups/s (floor {floor})")
-        if c[stack]["max_stale_age_ms"] > base["overload"]["staleness_bound_ms"]:
+        if sc["max_stale_age_ms"] > base_overload["staleness_bound_ms"]:
             failures.append(
                 f"serving {stack} served a read staler than the bound: "
-                f"{c[stack]['max_stale_age_ms']} ms"
+                f"{sc['max_stale_age_ms']} ms"
             )
-    o = cur["overload"]
+    o = require_phase(cur, "overload", source="current serving")
     if not (o["degraded"] > 0 and o["shed"] > 0):
         failures.append(f"serving overload no longer degrades AND sheds: {o}")
     elif o["max_stale_age_ms"] > o["staleness_bound_ms"]:

@@ -33,6 +33,14 @@ set -euo pipefail
 
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "=== tier-1 static analysis (fslint) ==="
+# stdlib-only invariant checker (see src/repro/analysis/README.md): the
+# recurring bug classes of PRs 5-9 as enforced rules.  Exits nonzero on any
+# finding, unused suppression, or stale baseline entry.  ~2s; runs first so
+# a rule violation fails fast before the test suite spends minutes.
+python -m repro.analysis
+
 python -m pytest -x -q -p no:cacheprovider --durations=15 "$@"
 
 if [[ "${TIER1_SKIP_BENCH:-0}" != "1" ]]; then

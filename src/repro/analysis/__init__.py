@@ -1,0 +1,25 @@
+"""fslint — this repo's invariant checker (``python -m repro.analysis``).
+
+A stdlib-only static-analysis framework whose rules are this codebase's own
+recurring bug classes, promoted from one-off satellite fixes into enforced
+invariants: publisher-buffer aliasing (PR 5), substring gauge-key matching
+(PR 9), vacuous bench gates (PR 8), wall-clock/unseeded RNG on the
+byte-replayable chaos surface (PR 7's determinism contract), use-after-donate
+on the device plane (PR 2), wire-format endianness/dispatch discipline, and
+bare-dict stats returns (PR 9's typed-stats refactor).  A tokenize-based
+format probe additionally EXECUTES the line-length/quote/trailing-whitespace
+portion of the ruff format gate that the build container could only
+approximate.
+
+See README.md in this directory for the rule catalog, suppression syntax,
+and how to add a rule.
+"""
+
+from .engine import (  # noqa: F401
+    FileContext,
+    Finding,
+    ProjectContext,
+    RunResult,
+    run,
+)
+from .registry import RULES, Rule, rule  # noqa: F401

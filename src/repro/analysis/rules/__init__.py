@@ -1,0 +1,20 @@
+"""Rule modules.  Importing this package registers every rule.
+
+Each module owns one invariant and opens with the history that made it a
+rule — the PR whose bug (or whose design contract) it locks in.  Add a new
+rule by dropping a module here, decorating its checker with
+``@registry.rule(...)``, and importing it below; the fixture suite in
+``tests/analysis`` expects every rule to ship a positive fixture (the bug,
+reproduced) and a negative fixture (the shipped fix).
+"""
+
+from . import (  # noqa: F401
+    aliasing,
+    determinism,
+    donation,
+    formatting,
+    gates,
+    gauges,
+    stats,
+    wire_format,
+)

@@ -1,0 +1,82 @@
+"""Rule ``donation``: never touch a buffer after passing it in a donated slot.
+
+History: PR 2 made device memory the source of truth — the online-merge
+scatter is jitted with ``donate_argnums`` so XLA rewrites the table planes
+in place.  Donation invalidates the caller's handle: reading a donated jax
+array afterwards raises (at best) or silently reads garbage in dispatch
+paths that skip the check.  PR 2 left the discipline implicit in the call
+sites; this rule makes it structural for the device-plane modules
+(``core/online_store.py`` and the kernels tree).
+
+Mechanics: the engine's project pre-pass records every function jitted with
+literal ``donate_argnums`` (decorator ``@functools.partial(jax.jit,
+donate_argnums=...)`` or ``g = jax.jit(f, donate_argnums=...)``).  At each
+call site of a known donating function, any plain-name argument in a
+donated position is dead after the call statement: a later load of that
+name in the same function — before a rebinding — is flagged.  Non-name
+donated arguments (``jnp.asarray(x)``, ``*splat``) are fresh temporaries
+the caller cannot re-touch and are skipped.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .. import registry
+from ._ast_util import (
+    functions,
+    names_loaded,
+    names_stored,
+    statements_in_order,
+    terminal_attr,
+)
+
+
+@registry.rule(
+    "donation",
+    scope=(
+        "src/repro/core/online_store.py",
+        "src/repro/kernels/*/*.py",
+        "src/repro/kernels/*.py",
+    ),
+    description="no use of a variable after it was passed in a "
+    "donate_argnums position (use-after-donate reads freed "
+    "device memory)",
+)
+def check(ctx, project):
+    if not project.donated:
+        return
+    for fn in functions(ctx.tree):
+        stmts = statements_in_order(fn)
+        # donated name -> (donating callee, call line) awaiting a later use
+        dead: dict[str, tuple[str, int]] = {}
+        for stmt in stmts:
+            # a later *load* of a dead name is the violation; check before
+            # this statement's own donations/rebinds take effect
+            loaded = names_loaded(stmt)
+            for name in sorted(dead.keys() & loaded):
+                callee, line = dead[name]
+                yield ctx.finding(
+                    "donation",
+                    stmt,
+                    f"{name!r} was donated to {callee}() on line {line} "
+                    f"(donate_argnums); its buffer no longer exists — "
+                    f"rebind it from the call's result or copy before the "
+                    f"call",
+                )
+                del dead[name]  # one report per donation is enough
+            for call in ast.walk(stmt):
+                if not isinstance(call, ast.Call):
+                    continue
+                callee = terminal_attr(call.func)
+                if callee not in project.donated:
+                    continue
+                for pos in project.donated[callee]:
+                    if pos < len(call.args):
+                        arg = call.args[pos]
+                        if isinstance(arg, ast.Name):
+                            dead[arg.id] = (callee, call.lineno)
+            # stores clear LAST: ``x = donating(x)`` rebinds the name to the
+            # call's result, which is exactly how a caller revives a handle
+            for name in names_stored(stmt):
+                dead.pop(name, None)

@@ -342,7 +342,11 @@ class ServingFront:
         if ids is None:
             ids = encode_keys(id_columns)
         else:
-            ids = np.asarray(ids, np.int64)
+            # the ticket outlives this call in self._queues until the next
+            # flush; own the ids instead of aliasing the caller's buffer
+            # (np.asarray is a no-copy view on dtype match — the PR-5
+            # ReplicationLog bug class, enforced by fslint's aliasing rule)
+            ids = np.array(ids, np.int64, copy=True)
         if deadline_ms is None and _default_deadline:
             deadline_ms = self.config.deadline_ms
         n = len(ids)

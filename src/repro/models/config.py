@@ -66,7 +66,7 @@ class ModelConfig:
     # -- MTP (deepseek-v3) -----------------------------------------------------------
     mtp_depth: int = 0
 
-    # -- SSM (mamba2 / zamba2) ----------------------------------------------------------
+    # -- SSM (mamba2 / zamba2) ---------------------------------------------------------
     ssm: bool = False              # True => mixer layers are Mamba2 blocks
     ssm_state: int = 0             # N
     ssm_expand: int = 2
@@ -75,33 +75,33 @@ class ModelConfig:
     ssm_conv_width: int = 4
     ssm_chunk: int = 128
 
-    # -- hybrid (zamba2): a SHARED attention block applied every Nth layer ---------------
+    # -- hybrid (zamba2): a SHARED attention block applied every Nth layer -------------
     hybrid_attn_period: int = 0
 
-    # -- enc-dec (whisper) -------------------------------------------------------------------
+    # -- enc-dec (whisper) -------------------------------------------------------------
     encoder_decoder: bool = False
     encoder_layers: int = 0
     encoder_seq: int = 0           # frame count from the (stub) frontend
 
-    # -- vision prefix (pixtral) ------------------------------------------------------------------
+    # -- vision prefix (pixtral) -------------------------------------------------------
     vision_prefix: bool = False
     vision_dim: int = 0            # stub patch-embedding dim
     num_patches: int = 0
 
-    # -- numerics ----------------------------------------------------------------------------------
+    # -- numerics ----------------------------------------------------------------------
     param_dtype: str = "bfloat16"
     compute_dtype: str = "bfloat16"
     norm_eps: float = 1e-6
     tie_embeddings: bool = False
 
-    # -- attention implementation -------------------------------------------------------------------
+    # -- attention implementation ------------------------------------------------------
     #: "xla" — einsum attention (CPU-compilable; what the dry-run lowers).
     #: "pallas_flash" — the kernels/flash_attn forward for plain causal
     #: attention (TPU target; interpret-mode on CPU).  Falls back to xla for
     #: windowed/softcapped/cross/decode paths.
     attn_impl: str = "xla"
 
-    # ------------------------------------------------------------------------------------------
+    # ----------------------------------------------------------------------------------
     def __post_init__(self) -> None:
         if self.ssm:
             assert self.ssm_state > 0

@@ -1,0 +1,37 @@
+"""Positive fixture for rule ``aliasing``.
+
+The PR-5 ``ReplicationLog.append`` bug, verbatim shape: the logged batch
+wraps ``np.asarray`` views of the publisher's arrays.  ``asarray`` is a
+no-copy pass-through when the dtype already matches, so the retained log
+entry aliases the caller's LIVE merge buffers — a publisher reusing its
+arrays rewrites history that replicas have yet to drain.
+"""
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicatedBatch:
+    seq: int
+    keys: np.ndarray
+    event_ts: np.ndarray
+    values: np.ndarray
+
+
+class ReplicationLog:
+    def __init__(self):
+        self.next_seq = 0
+        self._batches = []
+
+    def append(self, keys: np.ndarray, event_ts: np.ndarray, values: np.ndarray):
+        batch = ReplicatedBatch(
+            seq=self.next_seq,
+            keys=np.asarray(keys, np.int64),
+            event_ts=np.asarray(event_ts, np.int64),
+            values=np.asarray(values, np.float32),
+        )
+        self.next_seq += 1
+        self._batches.append(batch)
+        return batch

@@ -1,0 +1,40 @@
+"""Negative fixture for rule ``aliasing``: the shipped PR-5 fix.
+
+``_frozen_copy`` owns the data (``copy=True``) and freezes it
+(``writeable=False``) before the batch enters the log's retention.
+"""
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicatedBatch:
+    seq: int
+    keys: np.ndarray
+    event_ts: np.ndarray
+    values: np.ndarray
+
+
+def _frozen_copy(a: np.ndarray, dtype=None) -> np.ndarray:
+    out = np.array(a, dtype=dtype, copy=True)
+    out.flags.writeable = False
+    return out
+
+
+class ReplicationLog:
+    def __init__(self):
+        self.next_seq = 0
+        self._batches = []
+
+    def append(self, keys: np.ndarray, event_ts: np.ndarray, values: np.ndarray):
+        batch = ReplicatedBatch(
+            seq=self.next_seq,
+            keys=_frozen_copy(keys, np.int64),
+            event_ts=_frozen_copy(event_ts, np.int64),
+            values=_frozen_copy(values, np.float32),
+        )
+        self.next_seq += 1
+        self._batches.append(batch)
+        return batch

@@ -1,0 +1,25 @@
+"""Positive fixture for rule ``determinism``.
+
+Wall clock and module-state RNG on the deterministic-replay surface:
+``time.time()`` as a decision input, ``random.random()`` drawing from
+process-global state, and an entropy-seeded ``default_rng()``.  Any one
+of these turns PR-7's byte-replayable chaos ledger into flaky noise.
+"""
+
+import random
+import time
+
+import numpy as np
+
+
+def backoff_jitter_ms(streak):
+    return (time.time() * 1000.0) % float(2**streak)
+
+
+def should_drop(rate):
+    return random.random() < rate
+
+
+def fault_schedule(n):
+    rng = np.random.default_rng()
+    return rng.random(n)

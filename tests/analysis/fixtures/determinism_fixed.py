@@ -1,0 +1,29 @@
+"""Negative fixture for rule ``determinism``: the shipped PR-7 shape.
+
+Every decision is a pure splitmix64 hash of (seed, logical tick), and
+numpy draws come from an explicitly seeded generator.
+"""
+
+import numpy as np
+
+_MASK = (1 << 64) - 1
+
+
+def _splitmix64(x):
+    x = (x + 0x9E3779B97F4A7C15) & _MASK
+    x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & _MASK
+    x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & _MASK
+    return x ^ (x >> 31)
+
+
+def backoff_jitter_ticks(seed, streak):
+    return _splitmix64(seed ^ streak) % (2**streak)
+
+
+def should_drop(seed, tick, rate):
+    return (_splitmix64(seed ^ tick) / float(_MASK)) < rate
+
+
+def fault_schedule(seed, n):
+    rng = np.random.default_rng(seed)
+    return rng.random(n)

@@ -1,0 +1,22 @@
+"""Positive fixture for rule ``donation``.
+
+Use-after-donate: ``planes`` is passed in a ``donate_argnums`` slot, so
+XLA reuses its device buffer for the output — the later ``planes.sum()``
+reads freed device memory (raises at best, garbage in dispatch paths
+that skip the check).
+"""
+
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def merge_at_slots(planes, updates):
+    return planes.at[:].set(updates)
+
+
+def apply_update(planes, updates):
+    merged = merge_at_slots(planes, updates)
+    checksum = planes.sum()
+    return merged, checksum

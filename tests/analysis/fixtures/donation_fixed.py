@@ -1,0 +1,17 @@
+"""Negative fixture for rule ``donation``: read before donating, and
+rebind the caller's handle from the call's result afterwards."""
+
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def merge_at_slots(planes, updates):
+    return planes.at[:].set(updates)
+
+
+def apply_update(planes, updates):
+    checksum = planes.sum()
+    planes = merge_at_slots(planes, updates)
+    return planes, checksum

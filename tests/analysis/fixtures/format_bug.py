@@ -1,0 +1,11 @@
+"""Positive fixture for rule ``format``: over-length line, trailing
+whitespace, and a single-quoted string on the ruff-format-claimed tree."""
+
+TABLE = 'driver_hourly_stats'
+
+FLOOR = 1000.0  # merge throughput floor (rows/s), calibrated on the CI runner class, held with margin
+
+
+def describe():
+    return f"table={TABLE} floor={FLOOR}"
+RESULTS_DIR = "results"   

@@ -1,0 +1,15 @@
+"""Negative fixture for rule ``format``: wrapped lines, double quotes,
+no trailing whitespace.  The single quote INSIDE a double-quoted string
+and the double-quote-bearing single-quoted string are both legal."""
+
+TABLE = "driver_hourly_stats"
+
+# merge throughput floor (rows/s), calibrated on the CI runner class,
+# held with margin
+FLOOR = 1000.0
+
+QUOTED = 'a "quoted" segment keeps single quotes to avoid escaping'
+
+
+def describe():
+    return f"table={TABLE} floor={FLOOR}"

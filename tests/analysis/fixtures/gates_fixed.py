@@ -1,0 +1,43 @@
+"""Negative fixture for rule ``vacuous-gate``: the shipped PR-8 shape.
+
+A missing artifact fails the gate loudly, exceptions are narrow and
+handled with a recorded failure, and asserts test measured quantities.
+(The narrow ``except ProcessLookupError: pass`` is the legitimate
+kill-an-already-dead-pid idiom and must NOT be flagged.)
+"""
+
+import json
+import os
+import signal
+from pathlib import Path
+
+
+def check_regression(report: Path) -> bool:
+    if not report.exists():
+        raise SystemExit(
+            f"{report}: bench artifact missing — the smoke that produces it "
+            f"is dead upstream; this gate cannot pass vacuously"
+        )
+    current = json.loads(report.read_text())
+    return current["merge_rows_per_s"] >= 1000.0
+
+
+def gate_all(reports):
+    failures = []
+    for report in reports:
+        try:
+            ok = check_regression(report)
+        except ValueError as e:
+            failures.append((report, f"unreadable: {e}"))
+            continue
+        if not ok:
+            failures.append((report, "below floor"))
+    assert len(reports) > 0
+    return failures
+
+
+def stop_worker(pid: int) -> None:
+    try:
+        os.kill(pid, signal.SIGTERM)
+    except ProcessLookupError:
+        pass

@@ -1,0 +1,29 @@
+"""Positive fixture for rule ``gauge-keys``.
+
+The PR-9 ``clear_replica_gauges`` bug, verbatim shape: the replica name
+is matched as a raw suffix of the gauge key, so clearing ``r1`` touches
+``r11``'s gauges, while per-shard keys that put the replica mid-path
+(``replication/shard_lag_batches/{replica}/{shard}``) are missed
+entirely.  Plus the construction-side half: a gauge key minted by string
+concatenation.
+"""
+
+
+class HealthMonitor:
+    def __init__(self, system):
+        self.system = system
+
+    def clear_replica_gauges(self, replica):
+        suffix = f"/{replica}"
+        gauges = self.system.gauges
+        for key in [
+            k
+            for k in gauges
+            if k.startswith("replication/") and k.endswith(suffix)
+        ]:
+            del gauges[key]
+
+    def record_lag(self, plane, replica, lag):
+        self.system.set_gauge(
+            "replication/lag_batches/" + plane + "/" + replica, lag
+        )

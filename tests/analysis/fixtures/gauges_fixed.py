@@ -1,0 +1,24 @@
+"""Negative fixture for rule ``gauge-keys``: the shipped PR-9 fix.
+
+Replica identity is matched as a full ``/``-separated segment (any
+position in the key path), and keys are minted as f-strings.
+"""
+
+
+class HealthMonitor:
+    def __init__(self, system):
+        self.system = system
+
+    def clear_replica_gauges(self, replica):
+        gauges = self.system.gauges
+        for key in [
+            k
+            for k in gauges
+            if k.startswith("replication/") and replica in k.split("/")
+        ]:
+            del gauges[key]
+
+    def record_lag(self, plane, replica, lag):
+        self.system.set_gauge(
+            f"replication/lag_batches/{plane}/{replica}", lag
+        )

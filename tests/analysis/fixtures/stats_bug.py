@@ -1,0 +1,20 @@
+"""Positive fixture for rule ``frozen-stats``.
+
+A public function returns a bare dict literal whose keys reproduce the
+fields of an existing frozen stats dataclass — the typed result PR 9
+introduced, downgraded back to a stringly-keyed dict every consumer can
+typo into a silent KeyError.
+"""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class MergeStats:
+    inserts: int
+    overrides: int
+    noops: int
+
+
+def merge_summary(inserts: int, overrides: int, noops: int):
+    return {"inserts": inserts, "overrides": overrides, "noops": noops}

@@ -1,0 +1,24 @@
+"""Negative fixture for rule ``frozen-stats``: the public surface returns
+the frozen dataclass; dict literals remain legal at serialization
+boundaries (``to_dict``-style names are exempt — dicts are their job)."""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class MergeStats:
+    inserts: int
+    overrides: int
+    noops: int
+
+
+def merge_summary(inserts: int, overrides: int, noops: int) -> MergeStats:
+    return MergeStats(inserts=inserts, overrides=overrides, noops=noops)
+
+
+def to_dict(stats: MergeStats) -> dict:
+    return {
+        "inserts": stats.inserts,
+        "overrides": stats.overrides,
+        "noops": stats.noops,
+    }

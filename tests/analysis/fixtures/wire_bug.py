@@ -1,0 +1,32 @@
+"""Positive fixture for rule ``wire-format``.
+
+Native-order struct formats on the wire surface (no ``<`` prefix: byte
+order and alignment change per architecture), and a frame-kind magic
+(``ACK_MAGIC``) that encodes but is never dispatched by
+``StreamDecoder`` — those frames are dropped as torn-stream garbage on
+the receive path.
+"""
+
+import struct
+
+MAGIC = b"FW"
+ACK_MAGIC = b"FA"
+
+_HEADER = struct.Struct("2sBBI")
+
+
+def encode_ack(seq: int) -> bytes:
+    return ACK_MAGIC + struct.pack("Q", seq)
+
+
+class StreamDecoder:
+    def __init__(self):
+        self._buf = bytearray()
+
+    def feed(self, data: bytes):
+        self._buf += data
+        if len(self._buf) < _HEADER.size:
+            return None
+        if bytes(self._buf[:2]) == MAGIC:
+            return "frame"
+        return None

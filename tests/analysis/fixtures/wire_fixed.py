@@ -1,0 +1,28 @@
+"""Negative fixture for rule ``wire-format``: little-endian-explicit
+formats, and every magic dispatched via the decoder's magic tuple."""
+
+import struct
+
+MAGIC = b"FW"
+ACK_MAGIC = b"FA"
+_STREAM_MAGICS = (MAGIC, ACK_MAGIC)
+
+_HEADER = struct.Struct("<2sBBI")
+
+
+def encode_ack(seq: int) -> bytes:
+    return ACK_MAGIC + struct.pack("<Q", seq)
+
+
+class StreamDecoder:
+    def __init__(self):
+        self._buf = bytearray()
+
+    def feed(self, data: bytes):
+        self._buf += data
+        if len(self._buf) < _HEADER.size:
+            return None
+        head = bytes(self._buf[:2])
+        if head not in _STREAM_MAGICS:
+            return None
+        return "ack" if head == ACK_MAGIC else "frame"

@@ -1,0 +1,300 @@
+"""Framework tests for fslint: suppressions, baseline, walking, CLI.
+
+These drive the engine on synthetic files under ``tmp_path`` (absolute
+paths, outside the repo root — also covering the fallback relpath) and
+the CLI through in-process ``main(argv)``.
+"""
+
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.__main__ import main
+from repro.analysis.engine import (
+    EXCLUDED_SUBTREES,
+    REPO_ROOT,
+    iter_python_files,
+    run,
+)
+
+FIXTURES = Path(__file__).resolve().parent / "fixtures"
+
+#: a one-line determinism violation, the workhorse for suppression tests
+VIOLATION = "import time\n\n\ndef now_ms():\n    return time.time() * 1000.0\n"
+
+
+def _run_determinism(path: Path, **kw):
+    kw.setdefault("select", ["determinism"])
+    kw.setdefault("ignore_scope", True)
+    kw.setdefault("baseline", None)
+    return run([str(path)], **kw)
+
+
+# -- suppressions -------------------------------------------------------------
+
+
+def test_violation_fires_without_suppression(tmp_path):
+    f = tmp_path / "mod.py"
+    f.write_text(VIOLATION)
+    result = _run_determinism(f)
+    assert len(result.findings) == 1
+    assert not result.clean
+
+
+def test_same_line_suppression_round_trip(tmp_path):
+    f = tmp_path / "mod.py"
+    f.write_text(
+        VIOLATION.replace(
+            "time.time() * 1000.0",
+            "time.time() * 1000.0  # fslint: disable=determinism",
+        )
+    )
+    result = _run_determinism(f)
+    assert result.findings == []
+    assert result.unused_suppressions == []
+    assert result.clean
+
+
+def test_comment_above_suppression_covers_next_line(tmp_path):
+    f = tmp_path / "mod.py"
+    f.write_text(
+        VIOLATION.replace(
+            "    return time.time",
+            "    # fslint: disable=determinism\n    return time.time",
+        )
+    )
+    result = _run_determinism(f)
+    assert result.findings == []
+    assert result.unused_suppressions == []
+
+
+def test_unused_suppression_fails_the_run(tmp_path):
+    f = tmp_path / "mod.py"
+    f.write_text("X = 1  # fslint: disable=determinism\n")
+    result = _run_determinism(f)
+    assert result.findings == []
+    assert len(result.unused_suppressions) == 1
+    assert result.unused_suppressions[0].rules == ("determinism",)
+    assert not result.clean
+
+
+def test_suppression_for_unselected_rule_is_not_misreported(tmp_path):
+    # the pragma names a rule that did not run; --select subsets must not
+    # call it unused
+    f = tmp_path / "mod.py"
+    f.write_text("X = 1  # fslint: disable=determinism\n")
+    result = run(
+        [str(f)], select=["wire-format"], ignore_scope=True, baseline=None
+    )
+    assert result.unused_suppressions == []
+    assert result.clean
+
+
+def test_suppression_covers_only_its_rule(tmp_path):
+    f = tmp_path / "mod.py"
+    f.write_text(
+        VIOLATION.replace(
+            "time.time() * 1000.0",
+            "time.time() * 1000.0  # fslint: disable=wire-format",
+        )
+    )
+    result = run(
+        [str(f)],
+        select=["determinism", "wire-format"],
+        ignore_scope=True,
+        baseline=None,
+    )
+    # the determinism finding survives; the wire-format pragma is dead
+    assert len(result.findings) == 1
+    assert len(result.unused_suppressions) == 1
+
+
+# -- baseline -----------------------------------------------------------------
+
+
+def test_baseline_subtracts_known_findings(tmp_path):
+    f = tmp_path / "mod.py"
+    f.write_text(VIOLATION)
+    first = _run_determinism(f)
+    assert len(first.findings) == 1
+    baseline = tmp_path / "baseline.json"
+    baseline.write_text(
+        json.dumps(
+            {
+                "version": 1,
+                "findings": [
+                    {"rule": x.rule, "path": x.path, "message": x.message}
+                    for x in first.findings
+                ],
+            }
+        )
+    )
+    second = _run_determinism(f, baseline=baseline)
+    assert second.findings == []
+    assert second.stale_baseline == []
+    assert second.clean
+
+
+def test_stale_baseline_entry_fails_the_run(tmp_path):
+    f = tmp_path / "mod.py"
+    f.write_text("X = 1\n")
+    baseline = tmp_path / "baseline.json"
+    baseline.write_text(
+        json.dumps(
+            {
+                "version": 1,
+                "findings": [
+                    {"rule": "determinism", "path": "gone.py", "message": "x"}
+                ],
+            }
+        )
+    )
+    result = _run_determinism(f, baseline=baseline)
+    assert result.findings == []
+    assert result.stale_baseline == ["determinism::gone.py::x"]
+    assert not result.clean
+
+
+def test_committed_baseline_is_empty():
+    from repro.analysis.engine import DEFAULT_BASELINE
+
+    data = json.loads(DEFAULT_BASELINE.read_text())
+    assert data["findings"] == []
+
+
+# -- walking / parsing --------------------------------------------------------
+
+
+def test_fixture_corpus_is_excluded_from_directory_walks():
+    (subtree,) = EXCLUDED_SUBTREES
+    assert subtree == "tests/analysis/fixtures"
+    walked = iter_python_files(REPO_ROOT, ["tests/analysis"])
+    assert walked, "the analysis test dir itself must be walkable"
+    assert not any("fixtures" in p.parts for p in walked)
+
+
+def test_explicitly_named_fixture_bypasses_the_exclusion():
+    target = FIXTURES / "determinism_bug.py"
+    walked = iter_python_files(REPO_ROOT, [str(target)])
+    assert walked == [target]
+
+
+def test_unparseable_file_is_a_finding_not_a_crash(tmp_path):
+    f = tmp_path / "broken.py"
+    f.write_text("def broken(:\n")
+    result = _run_determinism(f)
+    assert len(result.findings) == 1
+    assert result.findings[0].rule == "parse-error"
+
+
+def test_unknown_rule_name_raises():
+    with pytest.raises(KeyError, match="unknown rule"):
+        run(select=["no-such-rule"], baseline=None)
+
+
+# -- CLI ----------------------------------------------------------------------
+
+
+def _bug(name: str) -> str:
+    return str(FIXTURES / name)
+
+
+def test_cli_exit_zero_on_clean_file(capsys):
+    rc = main(
+        [
+            "--select=determinism",
+            "--no-scope",
+            "--baseline=",
+            _bug("determinism_fixed.py"),
+        ]
+    )
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "0 finding(s)" in out
+
+
+def test_cli_exit_one_and_renders_findings(capsys):
+    rc = main(
+        [
+            "--select=determinism",
+            "--no-scope",
+            "--baseline=",
+            _bug("determinism_bug.py"),
+        ]
+    )
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "[determinism]" in out
+    assert "determinism_bug.py" in out
+
+
+def test_cli_json_output_shape(capsys):
+    rc = main(
+        [
+            "--format=json",
+            "--select=wire-format",
+            "--no-scope",
+            "--baseline=",
+            _bug("wire_bug.py"),
+        ]
+    )
+    assert rc == 1
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["clean"] is False
+    assert payload["files_scanned"] == 1
+    assert payload["rules_run"] == ["wire-format"]
+    assert len(payload["findings"]) == 3
+    for finding in payload["findings"]:
+        assert set(finding) == {"rule", "path", "line", "col", "message"}
+
+
+def test_cli_unknown_rule_is_usage_error(capsys):
+    rc = main(["--select=no-such-rule"])
+    assert rc == 2
+    assert "unknown rule" in capsys.readouterr().err
+
+
+def test_cli_write_baseline_round_trip(tmp_path, capsys):
+    baseline = tmp_path / "baseline.json"
+    rc = main(
+        [
+            "--select=determinism",
+            "--no-scope",
+            "--baseline",
+            str(baseline),
+            "--write-baseline",
+            _bug("determinism_bug.py"),
+        ]
+    )
+    assert rc == 0
+    assert len(json.loads(baseline.read_text())["findings"]) == 3
+    capsys.readouterr()
+    rc = main(
+        [
+            "--select=determinism",
+            "--no-scope",
+            "--baseline",
+            str(baseline),
+            _bug("determinism_bug.py"),
+        ]
+    )
+    assert rc == 0
+    assert "0 finding(s)" in capsys.readouterr().out
+
+
+def test_cli_list_rules(capsys):
+    rc = main(["--list-rules"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    for name in (
+        "aliasing",
+        "determinism",
+        "donation",
+        "gauge-keys",
+        "vacuous-gate",
+        "wire-format",
+        "frozen-stats",
+        "format",
+    ):
+        assert name in out

@@ -1,0 +1,26 @@
+"""Dogfood gate: the default fslint run over the repo must be clean.
+
+This is the same invocation CI runs (``python -m repro.analysis``): every
+rule on its scoped surface, the committed (EMPTY) baseline, unused-
+suppression and stale-baseline hygiene included.  If this test fails, a
+real invariant regressed somewhere in the tree — fix the code, don't
+baseline it.
+"""
+
+from repro.analysis.engine import run
+
+
+def test_default_run_is_clean():
+    result = run()
+    problems = (
+        [f.render() for f in result.findings]
+        + [
+            f"{s.path}:{s.line}: unused suppression {s.rules}"
+            for s in result.unused_suppressions
+        ]
+        + [f"stale baseline: {fp}" for fp in result.stale_baseline]
+    )
+    assert result.clean, "\n".join(problems)
+    # sanity: the run actually covered the tree with the full rule set
+    assert result.files_scanned > 100
+    assert len(result.rules_run) == 8

@@ -1,0 +1,127 @@
+"""Regression tests for the bench gate's phase-presence discipline.
+
+Every phase extraction in ``benchmarks/check_regression.py`` goes through
+``require_phase``: a phase missing from a bench result means the section
+that produces it silently stopped running upstream, and the gate must
+fail LOUDLY (named phase, named source, available keys) instead of dying
+with an opaque KeyError — or worse, ``.get(..., {})``-ing its way to a
+vacuous pass (the PR-8 failure mode).
+"""
+
+import pytest
+
+from benchmarks.check_regression import (
+    check_chaos,
+    check_multi_home,
+    check_serving,
+    check_socket,
+    check_transfer_bytes,
+    require_phase,
+)
+
+
+def test_require_phase_returns_the_section():
+    result = {"resident_cycle": {"per_cycle_bytes": 128}}
+    section = require_phase(result, "resident_cycle", source="current")
+    assert section == {"per_cycle_bytes": 128}
+
+
+def test_require_phase_missing_fails_loudly():
+    with pytest.raises(SystemExit) as exc:
+        require_phase({"other": {}}, "resident_cycle", source="current")
+    msg = str(exc.value)
+    assert "resident_cycle" in msg
+    assert "current" in msg
+    assert "other" in msg  # names what IS present
+    assert "vacuous" in msg
+
+
+def test_require_phase_on_empty_result_names_the_gap():
+    with pytest.raises(SystemExit, match="<empty>"):
+        require_phase({}, "socket", source="current geo")
+
+
+def test_require_phase_rejects_scalar_phase():
+    with pytest.raises(SystemExit, match="not a mapping"):
+        require_phase({"socket": 42}, "socket", source="current geo")
+
+
+def test_require_phase_accepts_list_phases():
+    # lookup_table is a top-level phase that is a list of rows
+    rows = [{"entities": 1, "batch": 2}]
+    assert require_phase({"lookup_table": rows}, "lookup_table", source="x") == rows
+
+
+# -- the gate functions inherit the loud failure ----------------------------
+
+
+def test_check_socket_without_phase_refuses_to_gate():
+    with pytest.raises(SystemExit, match="socket"):
+        check_socket({}, {}, [])
+
+
+def test_check_serving_without_overload_refuses_to_gate():
+    # closed_loop present but the overload section vanished: the old code
+    # would KeyError (current) or gate nothing; now it names the gap
+    stack = {
+        "mean_coalesced_keys": 4096,
+        "cache_hit_rate": 0.5,
+        "lookups_per_s": 1000,
+        "max_stale_age_ms": 1,
+    }
+    closed = {"kernel_over_host_x": 1.0, "host": stack, "kernel": stack}
+    cur = {"closed_loop": closed}
+    base = {"closed_loop": closed, "overload": {"staleness_bound_ms": 100}}
+    with pytest.raises(SystemExit, match="overload"):
+        check_serving(cur, base, 0.3, 1.0, [])
+
+
+def test_check_chaos_without_partition_refuses_to_gate():
+    cur = {"chaos": {"converged_identical": True}}
+    base = {"chaos": {}}
+    with pytest.raises(SystemExit, match="partition"):
+        check_chaos(cur, base, 0.3, 1.0, [])
+
+
+def test_check_multi_home_without_failover_refuses_to_gate():
+    section = {
+        "per_shard_shipped_bytes": {"s0": 10},
+        "online_identical": True,
+        "offline_identical": True,
+    }
+    with pytest.raises(SystemExit, match="failover"):
+        check_multi_home({"multi_home": section}, {"multi_home": section}, 0.3, [])
+
+
+def test_intact_phases_still_gate_normally():
+    cur = {
+        "resident_cycle": {
+            "transfers": {"device_uploads": 0, "host_syncs": 0},
+            "per_cycle_bytes": 128,
+        },
+        "lookup_table": [],
+    }
+    failures: list = []
+    check_transfer_bytes(cur, cur, failures)
+    assert failures == []
+
+
+def test_intact_phases_still_catch_regressions():
+    base = {
+        "resident_cycle": {
+            "transfers": {"device_uploads": 0, "host_syncs": 0},
+            "per_cycle_bytes": 128,
+        },
+        "lookup_table": [],
+    }
+    cur = {
+        "resident_cycle": {
+            "transfers": {"device_uploads": 0, "host_syncs": 0},
+            "per_cycle_bytes": 256,
+        },
+        "lookup_table": [],
+    }
+    failures: list = []
+    check_transfer_bytes(cur, base, failures)
+    assert len(failures) == 1
+    assert "transfer bytes regressed" in failures[0]
